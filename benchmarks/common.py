@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    assert iters >= 1
+    """Median wall time per call in microseconds (CPU; jit-compiled).
+    Retries once on transient XLA-CPU compile failures (seen under heavy
+    concurrent compilation on 1-core containers)."""
+    for attempt in (0, 1):
+        try:
+            for _ in range(warmup):
+                out = fn(*args)
+                jax.block_until_ready(out)
+            break
+        except Exception:  # noqa: BLE001 — transient "Unknown MLIR failure"
+            if attempt:
+                raise
+            jax.clear_caches()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(rows: list[dict]) -> None:
+    """Print ``name,us_per_call,derived`` CSV (harness convention)."""
+    for r in rows:
+        name = r.pop("name")
+        us = r.pop("us_per_call", "")
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{us},{derived}")

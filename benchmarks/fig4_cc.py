@@ -1,0 +1,36 @@
+"""Paper Fig 4: inverse relationship between compute complexity and
+improvement over the memory-bound GPU."""
+
+from __future__ import annotations
+
+from repro.core import metrics
+from repro.core.costmodel import A6000, MEMRISTIVE_PIM, PAPER_GATE_COUNTS, TPU_V5E
+
+
+def run() -> list[dict]:
+    rows = []
+    pts = metrics.fig4_points(MEMRISTIVE_PIM, A6000, PAPER_GATE_COUNTS)
+    for p in sorted(pts, key=lambda q: q.cc):
+        # the TPU-era column: same CC axis, improvement vs v5e HBM bound
+        nbits = 32
+        io_bytes = (4 if "mul" in p.op and "fixed" in p.op else 3) * nbits // 8
+        tpu_membound = TPU_V5E.hbm_bw / io_bytes
+        rows.append({
+            "name": f"fig4/{p.op}",
+            "us_per_call": "",
+            "cc": f"{p.cc:.2f}",
+            "pim_tops": f"{p.pim_throughput/1e12:.2f}",
+            "improvement_vs_gpu_membound": f"{p.improvement:.1f}x",
+            "improvement_vs_tpu_membound": f"{p.pim_throughput/tpu_membound:.1f}x",
+        })
+    return rows
+
+
+def main():
+    from .common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

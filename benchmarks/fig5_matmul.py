@@ -1,0 +1,73 @@
+"""Paper Fig 5: batched n×n fp32 matrix multiplication — PIM vs accelerator,
+as data reuse O(n) grows.
+
+Reproduces the paper's crossover: for small n the accelerator is
+memory-bound and PIM competes; by n≈128 reuse lifts the accelerator to
+compute-bound and PIM loses (paper §4).  The us_per_call column times our
+MatPIM-schedule Pallas kernel (interpret mode) on a small instance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import A6000, MEMRISTIVE_PIM, PAPER_GATE_COUNTS, TPU_V5E
+from repro.kernels import ops
+
+from .common import time_fn
+
+SIZES = (16, 32, 64, 128, 256, 512)
+
+
+def pim_matmul_time(n: int, pim=MEMRISTIVE_PIM, gates=PAPER_GATE_COUNTS) -> float:
+    """MatPIM: n² dot products of length n per matrix pair, bit-serial
+    element-parallel → per-pair work = n³ MACs; rows hold matrix pairs."""
+    macs = n**3
+    g = gates["float32_add"] + gates["float32_mul"]
+    # one pair occupies n rows (row-parallel rank-1 updates over n steps)
+    pairs_parallel = pim.total_rows / n
+    cycles = macs / n * g * pim.cycles_per_gate  # n-way row parallel per pair
+    return cycles / pim.clock_hz / pairs_parallel  # seconds per pair at full occupancy
+
+
+def run() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(2, 128, 128)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(2, 128, 128)), jnp.float32)
+    kernel_us = time_fn(lambda x, y: ops.pim_matmul_op(x, y), a, b, warmup=1, iters=2)
+
+    for n in SIZES:
+        flops = 2 * n**3
+        bytes_ = 3 * n * n * 4
+        t_pim = pim_matmul_time(n)
+        t_gpu_mem = bytes_ / A6000.mem_bw
+        t_gpu_comp = flops / A6000.peak_fp32
+        t_tpu_mem = bytes_ / TPU_V5E.hbm_bw
+        t_tpu_comp = flops / TPU_V5E.peak_bf16
+        pim_tput = 1.0 / t_pim
+        rows.append({
+            "name": f"fig5/matmul_n{n}",
+            "us_per_call": f"{kernel_us:.0f}" if n == 128 else "",
+            "reuse_flops_per_byte": f"{flops/bytes_:.1f}",
+            "pim_pairs_per_s": f"{pim_tput:.3g}",
+            "gpu_membound_pairs_per_s": f"{1/t_gpu_mem:.3g}",
+            "gpu_computebound_pairs_per_s": f"{1/t_gpu_comp:.3g}",
+            "tpu_membound_pairs_per_s": f"{1/t_tpu_mem:.3g}",
+            "tpu_computebound_pairs_per_s": f"{1/t_tpu_comp:.3g}",
+            "pim_beats_gpu_exp": str(t_pim < max(t_gpu_mem, t_gpu_comp)),
+            "pim_eff_per_w": f"{pim_tput/MEMRISTIVE_PIM.max_power_w:.3g}",
+            "gpu_eff_per_w": f"{1/max(t_gpu_mem, t_gpu_comp)/A6000.max_power_w:.3g}",
+        })
+    return rows
+
+
+def main():
+    from .common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

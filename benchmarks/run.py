@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  fig3_arith      — §3 vectored arithmetic throughput/efficiency
+  fig4_cc         — §3 compute-complexity vs improvement
+  fig5_matmul     — §4 batched matmul reuse crossover
+  fig6_cnn_infer  — §5 CNN inference
+  fig7_cnn_train  — §5 CNN training
+  roofline_table  — deliverable (g): per-cell three-term roofline + Fig-8 verdicts
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import fig3_arith, fig4_cc, fig5_matmul, fig6_cnn_infer, fig7_cnn_train, roofline_table
+    from .common import emit
+
+    failures = 0
+    for mod in (fig3_arith, fig4_cc, fig5_matmul, fig6_cnn_infer, fig7_cnn_train, roofline_table):
+        try:
+            emit(mod.run())
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{mod.__name__},ERROR,", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Beyond-paper showcase: the ConvPIM Fig-8 criterion applied to every
+dry-run cell of the 10 assigned 2026-era LM architectures.
+
+Reads results/dryrun_baseline/*.json (produced by repro.launch.dryrun) and
+prints, per (arch × shape), the CC/reuse quadrant and whether the modeled
+digital PIM beats the TPU-pod roofline — reproducing the paper's conclusion
+(training loses, memory-bound decode wins) on modern workloads.
+
+  PYTHONPATH=src python examples/pim_offload_report.py [results_dir]
+"""
+
+import glob
+import json
+import os
+import sys
+
+from repro.core.analyzer import Workload, analyze
+
+
+def main():
+    directory = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline"
+    records = []
+    for p in sorted(glob.glob(os.path.join(directory, "*__16x16.json"))):
+        with open(p) as f:
+            records.append(json.load(f))
+    if not records:
+        print(f"no dry-run records in {directory}; run repro.launch.dryrun first")
+        return
+    print(f"{'cell':44s} {'reuse':>9s} {'quadrant':22s} {'PIM?':5s} {'speedup':>8s}")
+    wins = 0
+    for r in records:
+        w = Workload(
+            f'{r["arch"]}×{r["shape"]}',
+            flops=r["flops_per_device"] * r["chips"],
+            hbm_bytes=r["fused_bytes_per_device"] * r["chips"],
+        )
+        v = analyze(w, chips=r["chips"])
+        wins += v.pim_wins
+        print(f"{w.name:44s} {v.reuse:9.1f} {v.quadrant:22s} "
+              f"{'WIN' if v.pim_wins else '-':5s} {v.speedup:8.2g}")
+    print(f"\nPIM wins {wins}/{len(records)} cells — paper §6 predicts wins only in "
+          "the low-reuse (decode) rows.")
+
+
+if __name__ == "__main__":
+    main()

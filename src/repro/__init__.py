@@ -1,0 +1,1 @@
+"""repro — ConvPIM digital-PIM evaluation framework (see README.md)."""

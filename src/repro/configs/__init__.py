@@ -1,0 +1,2 @@
+from .base import SHAPES, ModelConfig, ShapeCell, input_specs
+from .registry import ARCHS, all_configs, get_config, get_smoke_config

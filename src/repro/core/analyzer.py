@@ -1,0 +1,104 @@
+"""PIM-offload analyzer — the paper's Fig 8 criterion as a framework feature.
+
+For any workload (a compiled training/serving step, or a hand-described op
+stream) the analyzer computes
+
+* the TPU-side three-term roofline time,
+* the modeled digital-PIM execution time (bit-serial element-parallel, with
+  either our netlists' gate counts or the paper-calibrated ones),
+* the paper's two axes — compute complexity of the dominant arithmetic and
+  data reuse (FLOPs/byte) — and the resulting quadrant verdict.
+
+The paper's conclusion (§6) reproduced as executable logic: **PIM wins only
+when reuse is low or CC is low**; full-precision CNN/LM *training* (high CC ×
+high reuse) stays on the accelerator, while memory-bound *decode* steps are
+the PIM-friendly frontier (paper ref [13]).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .costmodel import MEMRISTIVE_PIM, PAPER_GATE_COUNTS, TPU_V5E, PIMConfig, TPUConfig
+from .metrics import compute_complexity, machine_balance
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    flops: float  # global FLOPs per step (MAC = 2 FLOPs)
+    hbm_bytes: float  # global accelerator HBM traffic per step
+    collective_wire_bytes: float = 0.0  # per-device
+    dtype_bits: int = 32
+
+    @property
+    def reuse(self) -> float:
+        """Arithmetic intensity (paper §4's data-reuse axis)."""
+        return self.flops / self.hbm_bytes if self.hbm_bytes else float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadVerdict:
+    workload: str
+    tpu_time_s: float
+    pim_time_s: float
+    reuse: float
+    cc: float
+    reuse_is_low: bool
+    cc_is_low: bool
+    pim_wins: bool
+    speedup: float  # tpu_time / pim_time (>1 ⇒ PIM faster)
+    quadrant: str
+
+
+def pim_time(
+    w: Workload,
+    pim: PIMConfig = MEMRISTIVE_PIM,
+    gate_counts: dict[str, int] | None = None,
+) -> float:
+    """Bit-serial element-parallel time: FLOPs → add/mul pairs → gate-cycles.
+
+    A MAC is one float add + one float mul; full row-parallel occupancy is
+    assumed (upper bound, as in the paper's §5 methodology)."""
+    g = gate_counts or PAPER_GATE_COUNTS
+    n_mac = w.flops / 2.0
+    total_gates = n_mac * (g["float32_add"] + g["float32_mul"])
+    return total_gates * pim.cycles_per_gate / (pim.total_rows * pim.clock_hz)
+
+
+def tpu_time(w: Workload, chips: int = 1, tpu: TPUConfig = TPU_V5E) -> float:
+    compute = w.flops / (chips * tpu.peak_bf16)
+    memory = w.hbm_bytes / (chips * tpu.hbm_bw)
+    collective = w.collective_wire_bytes / tpu.ici_bw
+    return max(compute, memory, collective)
+
+
+def analyze(
+    w: Workload,
+    chips: int = 1,
+    pim: PIMConfig = MEMRISTIVE_PIM,
+    tpu: TPUConfig = TPU_V5E,
+    gate_counts: dict[str, int] | None = None,
+) -> OffloadVerdict:
+    g = gate_counts or PAPER_GATE_COUNTS
+    t_tpu = tpu_time(w, chips, tpu)
+    t_pim = pim_time(w, pim, g)
+    # dominant arithmetic = fp MAC → mean CC of add+mul at the workload dtype
+    cc = compute_complexity(g["float32_add"] + g["float32_mul"], 2 * 3 * w.dtype_bits)
+    # thresholds from the paper: reuse is "low" below the machine balance
+    # point (memory-bound on the accelerator); CC is "low" at fixed-add scale
+    reuse_low = w.reuse < machine_balance(tpu)
+    cc_low = cc <= 2 * compute_complexity(g["fixed32_add"], 3 * 32)
+    quadrant = f"{'low' if cc_low else 'high'}-CC/{'low' if reuse_low else 'high'}-reuse"
+    return OffloadVerdict(
+        workload=w.name,
+        tpu_time_s=t_tpu,
+        pim_time_s=t_pim,
+        reuse=w.reuse,
+        cc=cc,
+        reuse_is_low=reuse_low,
+        cc_is_low=cc_low,
+        pim_wins=t_pim < t_tpu,
+        speedup=t_tpu / t_pim if t_pim else float("inf"),
+        quadrant=quadrant,
+    )

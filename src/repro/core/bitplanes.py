@@ -1,0 +1,102 @@
+"""Bit-plane packing utilities for the digital-PIM abstract machine.
+
+A *bit-plane* is one column of the abstract crossbar model (paper Fig 1e):
+one bit per memory row.  We pack 32 rows into one ``uint32`` word so that a
+column-parallel logic gate over ``R`` rows becomes a single bitwise op over
+``ceil(R/32)`` words — the TPU-native (lane-packed, VPU-friendly) encoding of
+the paper's column operation.
+
+An ``N``-bit number vector is a list of ``N`` planes, LSB first.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+WORD = 32
+UMAX = jnp.uint32(0xFFFFFFFF)
+
+
+def num_words(n_elems: int) -> int:
+    """Words needed to hold one bit from each of ``n_elems`` rows."""
+    return (n_elems + WORD - 1) // WORD
+
+
+def pack_bits(bits) -> jnp.ndarray:
+    """Pack a boolean vector ``[n]`` into ``[ceil(n/32)]`` uint32 (LSB-first in word)."""
+    bits = jnp.asarray(bits, dtype=jnp.uint32)
+    n = bits.shape[0]
+    pad = (-n) % WORD
+    if pad:
+        bits = jnp.concatenate([bits, jnp.zeros((pad,), jnp.uint32)])
+    bits = bits.reshape(-1, WORD)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return (bits << shifts).sum(axis=1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jnp.ndarray, n_elems: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits` → bool ``[n_elems]``."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(-1)[:n_elems].astype(bool)
+
+
+def int_to_planes(x, nbits: int) -> list[jnp.ndarray]:
+    """Two's-complement integer vector ``[n]`` → ``nbits`` packed planes (LSB first)."""
+    x = jnp.asarray(x)
+    ux = x.astype(jnp.uint32) if x.dtype != jnp.uint32 else x
+    return [pack_bits((ux >> jnp.uint32(j)) & jnp.uint32(1)) for j in range(nbits)]
+
+
+def planes_to_int(planes: list[jnp.ndarray], n_elems: int, signed: bool = True) -> jnp.ndarray:
+    """``nbits`` packed planes → integer vector ``[n_elems]`` (two's complement)."""
+    nbits = len(planes)
+    acc = jnp.zeros((n_elems,), jnp.uint32)
+    for j, p in enumerate(planes):
+        acc = acc | (unpack_bits(p, n_elems).astype(jnp.uint32) << jnp.uint32(j))
+    if signed and nbits < 32:
+        sign = (acc >> jnp.uint32(nbits - 1)) & jnp.uint32(1)
+        ext = jnp.where(sign == 1, (UMAX << jnp.uint32(nbits)), jnp.uint32(0))
+        acc = acc | ext
+    if signed:
+        return acc.astype(jnp.int32)
+    return acc
+
+
+def f32_to_planes(x) -> list[jnp.ndarray]:
+    """float32 vector ``[n]`` → 32 packed planes (LSB first: mantissa, exp, sign)."""
+    x = jnp.asarray(x, jnp.float32)
+    bits = jax_bitcast_u32(x)
+    return [pack_bits((bits >> jnp.uint32(j)) & jnp.uint32(1)) for j in range(32)]
+
+
+def planes_to_f32(planes: list[jnp.ndarray], n_elems: int) -> jnp.ndarray:
+    assert len(planes) == 32
+    acc = jnp.zeros((n_elems,), jnp.uint32)
+    for j, p in enumerate(planes):
+        acc = acc | (unpack_bits(p, n_elems).astype(jnp.uint32) << jnp.uint32(j))
+    return jax_bitcast_f32(acc)
+
+
+def jax_bitcast_u32(x: jnp.ndarray) -> jnp.ndarray:
+    import jax
+
+    return jax.lax.bitcast_convert_type(x, jnp.uint32)
+
+
+def jax_bitcast_f32(x: jnp.ndarray) -> jnp.ndarray:
+    import jax
+
+    return jax.lax.bitcast_convert_type(x, jnp.float32)
+
+
+def np_pack_reference(bits: np.ndarray) -> np.ndarray:
+    """NumPy oracle for pack_bits (used by tests)."""
+    n = bits.shape[0]
+    pad = (-n) % WORD
+    if pad:
+        bits = np.concatenate([bits, np.zeros(pad, dtype=bits.dtype)])
+    bits = bits.reshape(-1, WORD).astype(np.uint64)
+    shifts = np.arange(WORD, dtype=np.uint64)
+    return (bits << shifts).sum(axis=1).astype(np.uint32)

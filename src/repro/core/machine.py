@@ -1,0 +1,323 @@
+"""Abstract digital-PIM machine (paper Fig 1e) and the PlaneVM gate DSL.
+
+The machine is a set of crossbar arrays; one column-parallel logic gate
+executes per cycle across *all* crossbars simultaneously.  Two gate bases are
+modeled, matching the paper:
+
+* **memristive** (MAGIC stateful logic): 2-input NOR (+ FALSE init).  Every
+  gate costs ``CYCLES_PER_GATE_MEMRISTIVE = 2`` cycles (output-column
+  initialization + evaluation) — this constant is what calibrates our model to
+  the paper's Fig 3 numbers (9-gate full adder → 18 cycles/bit → 233 TOPS for
+  32-bit fixed add on the 48 GB memristive configuration).
+* **dram** (SIMDRAM-style): MAJ3/NOT via triple-row activation.  The paper
+  applies identical schedule lengths with a different clock (its DRAM numbers
+  are exactly the memristive ones scaled by 0.5 MHz / 333 MHz), and we follow
+  that convention; see ``costmodel.py``.
+
+``PlaneVM`` is the single source of truth for arithmetic algorithms: the same
+algorithm code runs in
+
+* **execute** mode — planes are packed ``uint32`` jnp arrays; bitwise ops give
+  a bit-exact simulation (the oracle used by tests and benchmarks), while gate
+  and cycle counters accumulate the analytical cost; and
+* **record** mode — planes are symbolic column ids; the VM emits a flat NOR
+  ``Schedule`` that the Pallas kernel (``repro.kernels.pim_bitserial``)
+  executes inside VMEM tiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bitplanes import UMAX
+
+CYCLES_PER_GATE_MEMRISTIVE = 2  # MAGIC: init + evaluate
+CYCLES_PER_GATE_DRAM = 2  # SIMDRAM AAP pair (paper's clock-scaled parity)
+
+# Schedule opcodes (NOR-only basis; INIT0/INIT1 are column initializations).
+OP_NOR = 0
+OP_INIT0 = 1
+OP_INIT1 = 2
+OP_COPY = 3  # buffered copy (2 NOTs fused); costs one gate slot
+
+
+@dataclasses.dataclass
+class Schedule:
+    """A flat column-op program: one row per gate, ``(op, a, b, out)``."""
+
+    ops: np.ndarray  # [G, 4] int32
+    num_cols: int
+    input_cols: dict[str, list[int]]
+    output_cols: dict[str, list[int]]
+
+    @property
+    def num_gates(self) -> int:
+        return int(self.ops.shape[0])
+
+    def cycles(self, cycles_per_gate: int = CYCLES_PER_GATE_MEMRISTIVE) -> int:
+        return self.num_gates * cycles_per_gate
+
+    def as_arrays(self):
+        return (
+            jnp.asarray(self.ops[:, 0], jnp.int32),
+            jnp.asarray(self.ops[:, 1], jnp.int32),
+            jnp.asarray(self.ops[:, 2], jnp.int32),
+            jnp.asarray(self.ops[:, 3], jnp.int32),
+        )
+
+
+class PlaneVM:
+    """Gate-level DSL over bit-planes.
+
+    mode='execute': plane values are uint32 arrays [W]; ops evaluated eagerly.
+    mode='record' : plane values are int column ids; ops appended to a program.
+    """
+
+    def __init__(self, mode: str = "execute", n_words: int | None = None):
+        assert mode in ("execute", "record")
+        self.mode = mode
+        self.n_words = n_words
+        self.gates = 0  # NOR-equivalent gate count (the paper's cost unit)
+        self._not_cache: dict[int, Any] = {}
+        # record mode state
+        self._prog: list[tuple[int, int, int, int]] = []
+        self._next_col = 0
+        self._const0 = None
+        self._const1 = None
+
+    # ---------------------------------------------------------------- helpers
+    def _fresh_col(self) -> int:
+        c = self._next_col
+        self._next_col += 1
+        return c
+
+    def input_plane(self, value=None) -> Any:
+        """Declare an input plane (record mode allocates a column id)."""
+        if self.mode == "record":
+            return self._fresh_col()
+        assert value is not None
+        return jnp.asarray(value, jnp.uint32)
+
+    def const0(self) -> Any:
+        if self.mode == "execute":
+            if self._const0 is None:
+                self._const0 = jnp.zeros((self.n_words,), jnp.uint32)
+            return self._const0
+        if self._const0 is None:
+            self._const0 = self._fresh_col()
+            self._prog.append((OP_INIT0, 0, 0, self._const0))
+        return self._const0
+
+    def const1(self) -> Any:
+        if self.mode == "execute":
+            if self._const1 is None:
+                self._const1 = jnp.full((self.n_words,), UMAX, jnp.uint32)
+            return self._const1
+        if self._const1 is None:
+            self._const1 = self._fresh_col()
+            self._prog.append((OP_INIT1, 0, 0, self._const1))
+        return self._const1
+
+    # ------------------------------------------------------------ gate basis
+    def nor(self, a, b) -> Any:
+        """The primitive gate: 1 gate slot."""
+        self.gates += 1
+        if self.mode == "execute":
+            return ~(a | b) & UMAX
+        out = self._fresh_col()
+        self._prog.append((OP_NOR, a, b, out))
+        return out
+
+    def not_(self, a) -> Any:
+        # Execute mode keys on id(); hold a reference to the key object so a
+        # GC'd array can never alias a live cache entry via id reuse.
+        key = id(a) if self.mode == "execute" else a
+        hit = self._not_cache.get(key)
+        if hit is not None:
+            return hit[1]
+        out = self.nor(a, a)
+        self._not_cache[key] = (a, out)
+        return out
+
+    def or_(self, a, b) -> Any:
+        return self.not_(self.nor(a, b))
+
+    def and_(self, a, b) -> Any:
+        return self.nor(self.not_(a), self.not_(b))
+
+    def nand(self, a, b) -> Any:
+        return self.not_(self.and_(a, b))
+
+    def xnor(self, a, b) -> Any:
+        n1 = self.nor(a, b)
+        n2 = self.nor(a, n1)
+        n3 = self.nor(b, n1)
+        return self.nor(n2, n3)
+
+    def xor(self, a, b) -> Any:
+        return self.not_(self.xnor(a, b))
+
+    def mux(self, s, x, y) -> Any:
+        """s ? x : y == (s AND x) OR (~s AND y)."""
+        sx = self.and_(s, x)
+        sy = self.and_(self.not_(s), y)
+        return self.or_(sx, sy)
+
+    def full_adder(self, a, b, c) -> tuple[Any, Any]:
+        """The 9-NOR full adder (paper §3: 9 gates/bit).  Returns (sum, carry)."""
+        n1 = self.nor(a, b)
+        n2 = self.nor(a, n1)
+        n3 = self.nor(b, n1)
+        n4 = self.nor(n2, n3)  # XNOR(a, b)
+        n5 = self.nor(n4, c)  # (a^b) & ~c
+        n6 = self.nor(n5, n1)  # carry = MAJ(a, b, c)
+        n7 = self.nor(n4, n5)  # (a^b) & c
+        n8 = self.nor(c, n5)
+        n9 = self.nor(n7, n8)  # sum = a ^ b ^ c
+        return n9, n6
+
+    def half_adder(self, a, b) -> tuple[Any, Any]:
+        s = self.xor(a, b)  # 5 gates
+        c = self.and_(a, b)  # <=3 gates (NOTs may be cached)
+        return s, c
+
+    # ------------------------------------------------------- tree reductions
+    def or_tree(self, xs: Sequence[Any]) -> Any:
+        xs = list(xs)
+        assert xs
+        while len(xs) > 1:
+            nxt = []
+            for i in range(0, len(xs) - 1, 2):
+                nxt.append(self.or_(xs[i], xs[i + 1]))
+            if len(xs) % 2:
+                nxt.append(xs[-1])
+            xs = nxt
+        return xs[0]
+
+    def nor_tree(self, xs: Sequence[Any]) -> Any:
+        """NOT(OR(xs)) — one gate cheaper at the root."""
+        xs = list(xs)
+        if len(xs) == 1:
+            return self.not_(xs[0])
+        while len(xs) > 2:
+            nxt = []
+            for i in range(0, len(xs) - 1, 2):
+                nxt.append(self.or_(xs[i], xs[i + 1]))
+            if len(xs) % 2:
+                nxt.append(xs[-1])
+            xs = nxt
+        return self.nor(xs[0], xs[1])
+
+    # ------------------------------------------------------------- recording
+    def finish_schedule(self, inputs: dict[str, list[int]], outputs: dict[str, list[int]]) -> Schedule:
+        assert self.mode == "record"
+        ops = np.asarray(self._prog, dtype=np.int32).reshape(-1, 4)
+        return Schedule(ops=ops, num_cols=self._next_col, input_cols=inputs, output_cols=outputs)
+
+
+def compress_schedule(schedule: Schedule) -> Schedule:
+    """Liveness-based column reallocation.
+
+    The crossbar has a fixed column budget (1024 in the paper's memristive
+    config) shared by operands, results and intermediates, so a faithful
+    schedule must recycle columns.  Linear-scan allocation over last-use
+    indices; output columns are pinned after their final write.
+    """
+    ops = schedule.ops
+    n_gates = ops.shape[0]
+    last_use: dict[int, int] = {}
+    for g in range(n_gates):
+        op, a, b, out = ops[g]
+        if op == OP_NOR:
+            last_use[int(a)] = g
+            last_use[int(b)] = g
+    protected = set()
+    for cols in schedule.output_cols.values():
+        protected.update(cols)
+    for c in protected:
+        last_use[c] = n_gates + 1  # never freed
+
+    mapping: dict[int, int] = {}
+    free: list[int] = []
+    next_col = 0
+
+    def alloc(c: int) -> int:
+        nonlocal next_col
+        if c in mapping:
+            return mapping[c]
+        if free:
+            slot = free.pop()
+        else:
+            slot = next_col
+            next_col += 1
+        mapping[c] = slot
+        return slot
+
+    # inputs are live from the start
+    for cols in schedule.input_cols.values():
+        for c in cols:
+            alloc(c)
+
+    new_ops = np.zeros_like(ops)
+    for g in range(n_gates):
+        op, a, b, out = (int(x) for x in ops[g])
+        na = mapping.get(a, 0) if op == OP_NOR else 0
+        nb = mapping.get(b, 0) if op == OP_NOR else 0
+        nout = alloc(out)
+        new_ops[g] = (op, na, nb, nout)
+        if op == OP_NOR:
+            for c in (a, b):
+                if last_use.get(c, -1) == g and c in mapping and c not in protected:
+                    free.append(mapping.pop(c))
+
+    # Input columns were allocated first, in order, before any frees — their
+    # initial slots are 0..n_in-1 in declaration order.
+    new_inputs = {}
+    nxt = 0
+    for k, cols in schedule.input_cols.items():
+        new_inputs[k] = list(range(nxt, nxt + len(cols)))
+        nxt += len(cols)
+
+    return Schedule(
+        ops=new_ops,
+        num_cols=next_col,
+        input_cols=new_inputs,
+        output_cols={k: [mapping[c] for c in v] for k, v in schedule.output_cols.items()},
+    )
+
+
+def execute_schedule(schedule: Schedule, input_planes: dict[str, list[jnp.ndarray]], n_words: int):
+    """Reference (pure-jnp, scan-based) executor for a recorded NOR program.
+
+    State: [num_cols, n_words] uint32.  Each step applies one column op with
+    dynamic indexing — compile time is O(1) in schedule length.
+    """
+    state = jnp.zeros((schedule.num_cols, n_words), jnp.uint32)
+    for name, cols in schedule.input_cols.items():
+        planes = input_planes[name]
+        assert len(planes) == len(cols), (name, len(planes), len(cols))
+        state = state.at[jnp.asarray(cols)].set(jnp.stack(planes))
+
+    op, a, b, out = schedule.as_arrays()
+
+    def step(state, g):
+        op_g, a_g, b_g, out_g = g
+        va = state[a_g]
+        vb = state[b_g]
+        nor = ~(va | vb) & UMAX
+        res = jnp.where(op_g == OP_NOR, nor,
+              jnp.where(op_g == OP_INIT0, jnp.zeros_like(nor),
+              jnp.where(op_g == OP_INIT1, jnp.full_like(nor, UMAX), va)))
+        state = state.at[out_g].set(res)
+        return state, None
+
+    state, _ = jax.lax.scan(step, state, (op, a, b, out))
+    result = {}
+    for name, cols in schedule.output_cols.items():
+        result[name] = [state[c] for c in cols]
+    return result

@@ -1,0 +1,70 @@
+"""Paper metrics: compute complexity (§3, ref [12]) and data reuse (§4).
+
+The paper's two-axis criterion (Fig 8):
+
+* **compute complexity** CC = logic gates per I/O bit — low CC favors PIM;
+* **data reuse** = FLOPs per byte moved (arithmetic intensity) — high reuse
+  lets the accelerator escape the memory wall, erasing PIM's advantage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .costmodel import GPUConfig, PIMConfig, TPUConfig
+
+
+def compute_complexity(gates: int, io_bits: int) -> float:
+    """Paper §3: number of logic gates performed per input+output bit."""
+    return gates / io_bits
+
+
+def data_reuse_matmul(n: int) -> float:
+    """O(n) reuse for n×n matmul: 2n³ FLOPs over 3n² words (paper §4)."""
+    return 2 * n**3 / (3 * n**2)
+
+
+def data_reuse_conv(k: int) -> float:
+    """O(k²) reuse for k×k conv on W×H images (paper §4)."""
+    return float(k * k)
+
+
+@dataclasses.dataclass(frozen=True)
+class ImprovementPoint:
+    """One point of the paper's Fig 4 (CC vs improvement over memory-bound GPU)."""
+
+    op: str
+    cc: float
+    pim_throughput: float
+    gpu_membound: float
+
+    @property
+    def improvement(self) -> float:
+        return self.pim_throughput / self.gpu_membound
+
+
+def fig4_points(pim: PIMConfig, gpu: GPUConfig, gate_counts: dict[str, int]) -> list[ImprovementPoint]:
+    """Reconstruct Fig 4: inverse relation between CC and PIM/GPU improvement."""
+    out = []
+    for op, gates in sorted(gate_counts.items()):
+        nbits = 32 if "32" in op else 16
+        io_bits = (4 if "mul" in op and "fixed" in op else 3) * nbits
+        bytes_per_op = io_bits // 8
+        out.append(
+            ImprovementPoint(
+                op=op,
+                cc=compute_complexity(gates, io_bits),
+                pim_throughput=pim.op_throughput(gates),
+                gpu_membound=gpu.membound_throughput(bytes_per_op),
+            )
+        )
+    return out
+
+
+def accelerator_membound(tpu: TPUConfig, bytes_per_op: int) -> float:
+    return tpu.hbm_bw / bytes_per_op
+
+
+def machine_balance(tpu: TPUConfig) -> float:
+    """FLOPs/byte at which compute and memory terms cross (v5e: ~240)."""
+    return tpu.peak_bf16 / tpu.hbm_bw

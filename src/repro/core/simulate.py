@@ -1,0 +1,135 @@
+"""User-facing bit-exact PIM simulation wrappers.
+
+These run the AritPIM plane algorithms in execute mode on packed planes and
+convert back to ordinary arrays.  Each call also reports the analytical cost
+(gate count → cycles → throughput under a PIM config; see ``costmodel``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import aritpim, bitplanes
+from .machine import PlaneVM
+
+
+@dataclasses.dataclass(frozen=True)
+class OpCost:
+    """Analytical cost of one vectored PIM op (independent of vector length)."""
+
+    name: str
+    gates: int  # serial NOR gates (= the paper's latency unit before init)
+    io_bits: int  # input+output bits per element (CC denominator)
+
+    @property
+    def compute_complexity(self) -> float:
+        """Paper §3: gates per I/O bit."""
+        return self.gates / self.io_bits
+
+
+def _run(fn, nbits_in, nbits_out, arrays, to_planes, from_planes):
+    n = arrays[0].shape[0]
+    vm = PlaneVM(mode="execute", n_words=bitplanes.num_words(n))
+    planes = [to_planes(a) for a in arrays]
+    out = fn(vm, *planes)
+    assert len(out) == nbits_out
+    return from_planes(out, n), vm.gates
+
+
+# -------------------------------------------------------------- fixed point
+
+def fixed_add(x, y, nbits: int = 32):
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    res, gates = _run(
+        aritpim.fixed_add, nbits, nbits, (x, y),
+        functools.partial(bitplanes.int_to_planes, nbits=nbits),
+        lambda p, n: bitplanes.planes_to_int(p, n, signed=True),
+    )
+    return res, OpCost(f"fixed{nbits}_add", gates, 3 * nbits)
+
+
+def fixed_mul(x, y, nbits: int = 32):
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    res, gates = _run(
+        aritpim.fixed_mul_signed, nbits, 2 * nbits, (x, y),
+        functools.partial(bitplanes.int_to_planes, nbits=nbits),
+        lambda p, n: bitplanes.planes_to_int(p[:32], n, signed=True) if nbits * 2 >= 32
+        else bitplanes.planes_to_int(p, n, signed=True),
+    )
+    return res, OpCost(f"fixed{nbits}_mul", gates, 4 * nbits)
+
+
+def fixed_mul_full(x, y, nbits: int = 32):
+    """Full 2N-bit product as (lo_uint32, hi_uint32) for nbits=32."""
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    n = x.shape[0]
+    vm = PlaneVM(mode="execute", n_words=bitplanes.num_words(n))
+    A = bitplanes.int_to_planes(x, nbits)
+    B = bitplanes.int_to_planes(y, nbits)
+    P = aritpim.fixed_mul_signed(vm, A, B)
+    lo = bitplanes.planes_to_int(P[:nbits], n, signed=False)
+    hi = bitplanes.planes_to_int(P[nbits:], n, signed=False)
+    return (lo, hi), OpCost(f"fixed{nbits}_mul", vm.gates, 4 * nbits)
+
+
+# ------------------------------------------------------------ floating point
+
+def float_add(x, y):
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    res, gates = _run(
+        aritpim.float_add, 32, 32, (x, y),
+        bitplanes.f32_to_planes, bitplanes.planes_to_f32,
+    )
+    return res, OpCost("float32_add", gates, 3 * 32)
+
+
+def float_sub(x, y):
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    res, gates = _run(
+        aritpim.float_sub, 32, 32, (x, y),
+        bitplanes.f32_to_planes, bitplanes.planes_to_f32,
+    )
+    return res, OpCost("float32_sub", gates, 3 * 32)
+
+
+def float_mul(x, y):
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    res, gates = _run(
+        aritpim.float_mul, 32, 32, (x, y),
+        bitplanes.f32_to_planes, bitplanes.planes_to_f32,
+    )
+    return res, OpCost("float32_mul", gates, 3 * 32)
+
+
+def fixed_div(x, y, nbits: int = 32):
+    """Signed division (C truncation semantics); x//0 → implementation-defined."""
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    res, gates = _run(
+        lambda vm, A, B: aritpim.fixed_div_signed(vm, A, B)[0], nbits, nbits, (x, y),
+        functools.partial(bitplanes.int_to_planes, nbits=nbits),
+        lambda p, n: bitplanes.planes_to_int(p, n, signed=True),
+    )
+    return res, OpCost(f"fixed{nbits}_div", gates, 3 * nbits)
+
+
+def float_div(x, y):
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    res, gates = _run(
+        aritpim.float_div, 32, 32, (x, y),
+        bitplanes.f32_to_planes, bitplanes.planes_to_f32,
+    )
+    return res, OpCost("float32_div", gates, 3 * 32)
+
+
+# Jitted variants (value path only; costs are static per op).
+fixed_add_jit = jax.jit(lambda x, y: fixed_add(x, y)[0])
+float_add_jit = jax.jit(lambda x, y: float_add(x, y)[0])
+float_mul_jit = jax.jit(lambda x, y: float_mul(x, y)[0])

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels: pim_bitserial (gate-schedule executor) and pim_matmul
+(MatPIM-schedule blocked matmul), with ops.py wrappers and ref.py oracles."""

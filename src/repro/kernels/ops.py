@@ -1,0 +1,65 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``pim_float_add/pim_float_mul/pim_fixed_add`` run the recorded NOR schedule
+through the ``pim_bitserial`` kernel (interpret mode on CPU; compiled on a
+real TPU) and convert packed bit-planes back to ordinary arrays.
+``pim_matmul`` is the MatPIM-schedule blocked matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from repro.core import aritpim, bitplanes
+
+from . import pim_bitserial, pim_matmul
+
+
+@functools.lru_cache(maxsize=None)
+def _ensure(key: str, nbits: int = 32):
+    sched = aritpim.build_schedule(key, nbits=nbits, compress=True)
+    reg_key = f"{key}{nbits}"
+    pim_bitserial.register_schedule(reg_key, sched)
+    return reg_key, sched
+
+
+def _binary_f32(opname: str, x, y, interpret: bool = True):
+    key, sched = _ensure(opname)
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    n = x.shape[0]
+    planes = jnp.stack(bitplanes.f32_to_planes(x) + bitplanes.f32_to_planes(y))
+    out = pim_bitserial.run_schedule(key, planes, interpret=interpret)
+    return bitplanes.planes_to_f32([out[i] for i in range(32)], n)
+
+
+def pim_float_add(x, y, interpret: bool = True):
+    return _binary_f32("float_add", x, y, interpret)
+
+
+def pim_float_mul(x, y, interpret: bool = True):
+    return _binary_f32("float_mul", x, y, interpret)
+
+
+def pim_fixed_add(x, y, nbits: int = 32, interpret: bool = True):
+    key, sched = _ensure("fixed_add", nbits)
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    n = x.shape[0]
+    planes = jnp.stack(
+        bitplanes.int_to_planes(x, nbits) + bitplanes.int_to_planes(y, nbits)
+    )
+    out = pim_bitserial.run_schedule(key, planes, interpret=interpret)
+    return bitplanes.planes_to_int([out[i] for i in range(nbits)], n, signed=True)
+
+
+def pim_matmul_op(a, b, *, bm=128, bk=128, bn=128, interpret: bool = True):
+    return pim_matmul.matmul(a, b, bm=bm, bk=bk, bn=bn, interpret=interpret)
+
+
+def schedule_info(opname: str, nbits: int = 32):
+    """(gates, compressed columns) for an op — used by benchmarks/tests."""
+    _, sched = _ensure(opname, nbits)
+    return sched.num_gates, sched.num_cols

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: bit-serial element-parallel PIM gate-schedule executor.
+
+TPU-native adaptation of the paper's crossbar column ops (DESIGN.md §2): a
+crossbar column over R rows becomes a lane-packed ``uint32`` bit-plane of
+``R/32`` words; the serial NOR schedule becomes a sequence of bitwise VPU ops
+over VMEM-resident planes.  HBM traffic is 2 input planes read + 1 output
+plane written per element bit — independent of schedule length, exactly the
+in-memory property the paper models.
+
+Tiling: the grid runs over blocks of the packed-words axis; each program
+holds the *entire* (column-compressed) crossbar state for its word-block in a
+VMEM scratch of shape ``[num_cols, BLOCK_WORDS]``.  The compressed column
+count (≤133 for float32 ops, see ``machine.compress_schedule``) and
+``BLOCK_WORDS=256`` give a ~136 KiB working set — comfortably inside VMEM and
+an exact analogue of one crossbar's 1024-column budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.machine import OP_INIT0, OP_INIT1, OP_NOR, Schedule
+
+BLOCK_WORDS = 256
+UMAX32 = 0xFFFFFFFF  # python int: folded into the kernel, not a captured array
+
+
+def _kernel(op_ref, a_ref, b_ref, o_ref, in_ref, out_ref, state, *, input_slots, output_slots):
+    # Load this block's input planes into their crossbar columns (static slots).
+    for i, c in enumerate(input_slots):
+        state[c, :] = in_ref[i, :]
+
+    n_gates = op_ref.shape[0]
+
+    def body(g, _):
+        op = op_ref[g]
+        a = a_ref[g]
+        b = b_ref[g]
+        o = o_ref[g]
+        va = pl.load(state, (pl.dslice(a, 1), slice(None)))
+        vb = pl.load(state, (pl.dslice(b, 1), slice(None)))
+        nor = ~(va | vb)
+        res = jnp.where(
+            op == OP_NOR, nor,
+            jnp.where(op == OP_INIT0, jnp.zeros_like(nor),
+                      jnp.where(op == OP_INIT1, jnp.full_like(nor, UMAX32), va)),
+        )
+        pl.store(state, (pl.dslice(o, 1), slice(None)), res)
+        return 0
+
+    jax.lax.fori_loop(0, n_gates, body, 0)
+
+    for i, c in enumerate(output_slots):
+        out_ref[i, :] = state[c, :]
+
+
+@functools.partial(jax.jit, static_argnames=("schedule_key", "interpret"))
+def _run(op, a, b, o, planes, *, schedule_key, interpret):
+    schedule, input_slots, output_slots = _SCHEDULES[schedule_key]
+    n_in, W = planes.shape
+    n_out = len(output_slots)
+    grid = (W // BLOCK_WORDS,)
+    return pl.pallas_call(
+        functools.partial(_kernel, input_slots=tuple(input_slots), output_slots=tuple(output_slots)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((op.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((a.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((b.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((o.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((n_in, BLOCK_WORDS), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n_out, BLOCK_WORDS), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n_out, W), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((schedule.num_cols, BLOCK_WORDS), jnp.uint32)],
+        interpret=interpret,
+    )(op, a, b, o, planes)
+
+
+# Registry of compiled schedules (keyed so jit can treat them as static).
+_SCHEDULES: dict[str, tuple[Schedule, list[int], list[int]]] = {}
+
+
+def register_schedule(key: str, schedule: Schedule) -> None:
+    input_slots = [c for name in sorted(schedule.input_cols) for c in schedule.input_cols[name]]
+    output_slots = [c for name in sorted(schedule.output_cols) for c in schedule.output_cols[name]]
+    _SCHEDULES[key] = (schedule, input_slots, output_slots)
+
+
+def run_schedule(key: str, planes: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Execute registered schedule ``key`` over stacked input planes.
+
+    planes: ``[n_inputs, W]`` uint32 — inputs concatenated in sorted-name
+    order (matching ``register_schedule``).  Returns ``[n_outputs, W]``.
+    W is padded to a BLOCK_WORDS multiple internally.
+    """
+    schedule, input_slots, output_slots = _SCHEDULES[key]
+    assert planes.shape[0] == len(input_slots), (planes.shape, len(input_slots))
+    W = planes.shape[1]
+    pad = (-W) % BLOCK_WORDS
+    if pad:
+        planes = jnp.pad(planes, ((0, 0), (0, pad)))
+    op, a, b, o = schedule.as_arrays()
+    out = _run(op, a, b, o, planes, schedule_key=key, interpret=interpret)
+    return out[:, :W]

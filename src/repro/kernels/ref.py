@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (per-kernel allclose targets)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import aritpim, bitplanes
+from repro.core.machine import PlaneVM, Schedule, execute_schedule
+
+
+def bitserial_ref(schedule: Schedule, planes: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for pim_bitserial: scan-based schedule execution on packed planes.
+
+    planes: [n_inputs, W] stacked in sorted input-name order."""
+    names = sorted(schedule.input_cols)
+    split = {}
+    i = 0
+    for n in names:
+        k = len(schedule.input_cols[n])
+        split[n] = [planes[i + j] for j in range(k)]
+        i += k
+    out = execute_schedule(schedule, split, n_words=planes.shape[1])
+    names_out = sorted(schedule.output_cols)
+    return jnp.stack([p for n in names_out for p in out[n]])
+
+
+def float_add_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Semantic oracle: IEEE-754 float32 addition (XLA scalar add)."""
+    return (x.astype(jnp.float32) + y.astype(jnp.float32)).astype(jnp.float32)
+
+
+def float_mul_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return (x.astype(jnp.float32) * y.astype(jnp.float32)).astype(jnp.float32)
+
+
+def fixed_add_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return (x.astype(jnp.int32) + y.astype(jnp.int32)).astype(jnp.int32)
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for pim_matmul: batched jnp einsum with fp32 accumulation."""
+    return jnp.einsum(
+        "gmk,gkn->gmn", a, b, preferred_element_type=jnp.float32
+    ).astype(a.dtype)

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any other import — jax locks the device
+count at first init.  The dry-run proves the distribution config is coherent
+(sharding propagates, collectives legal, memory fits) without hardware, and
+emits the cost/memory/collective numbers the §Roofline analysis consumes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, input_specs
+from repro.configs.registry import ARCHS
+from repro.core.roofline import build_report, parse_collectives
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes, num_chips
+from repro.parallel import sharding
+
+SKIPS: dict[tuple[str, str], str] = {}
+for _a in ARCHS:
+    _c = get_config(_a)
+    if not _c.supports_long_context:
+        SKIPS[(_a, "long_500k")] = (
+            "full-attention arch: 500k decode requires sub-quadratic "
+            "attention (DESIGN.md §5)"
+        )
+
+
+def _spec_tree(tree, mesh, spec_builder):
+    return sharding.to_named(spec_builder(tree), mesh)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, optimizer_name: str = "auto",
+               fsdp: str = "auto", extra_cfg: dict | None = None):
+    """Lower + compile one cell.  Returns (record dict, lowered, compiled)."""
+    cfg = get_config(arch)
+    # Exact cost accounting needs unrolled layers (XLA counts scan bodies
+    # once).  The single-pod pass feeds the §Roofline table → unroll; the
+    # multi-pod pass proves the pod-axis sharding compiles → keep the scan
+    # (8× faster on this 1-core container, numbers not used for the table).
+    cfg = dataclasses.replace(cfg, unroll_layers=not multi_pod)
+    if extra_cfg:
+        cfg = dataclasses.replace(cfg, **extra_cfg)
+    cell = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = num_chips(mesh)
+    use_fsdp = (cfg.param_count() > 5e9) if fsdp == "auto" else (fsdp == "on")
+
+    t0 = time.time()
+    if cell.kind == "train":
+        opt_name, optimizer = steps_mod.choose_optimizer(cfg, optimizer_name)
+        p_shapes = steps_mod.param_shapes(cfg)
+        o_shapes = steps_mod.opt_state_shapes(optimizer, p_shapes)
+        batch = dict(input_specs(cfg, cell))
+        batch.setdefault("labels", batch["tokens"])
+        p_spec = _spec_tree(p_shapes, mesh, lambda t: sharding.param_specs(t, cfg, fsdp=use_fsdp, mesh=mesh))
+        o_spec = _spec_tree(o_shapes, mesh, lambda t: sharding.param_specs(t, cfg, fsdp=use_fsdp, mesh=mesh))
+        b_axes = ("data", "model") if cfg.shard_mode == "zero3" else sharding.BATCH_AXES
+        b_spec = _spec_tree(batch, mesh, lambda t: sharding.batch_specs(t, mesh=mesh, axes=b_axes))
+        step = steps_mod.make_train_step(cfg, optimizer)
+        with mesh:
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_spec, o_spec, b_spec),
+                out_shardings=(p_spec, o_spec, None),
+            )
+            lowered = jitted.lower(p_shapes, o_shapes, batch)
+            compiled = lowered.compile()
+        mode = f"train/{opt_name}{'+fsdp' if use_fsdp else ''}"
+    else:
+        scfg = steps_mod.serve_config(cfg)
+        p_shapes = steps_mod.param_shapes(scfg)
+        p_spec = _spec_tree(p_shapes, mesh, lambda t: sharding.param_specs(t, scfg, fsdp=False, mesh=mesh))
+        specs = dict(input_specs(scfg, cell))
+        cross = specs.pop("cross_embeds", None)
+        cross_spec = None
+        if cross is not None:
+            cross_spec = _spec_tree(
+                {"x": cross}, mesh, lambda t: sharding.batch_specs(t, mesh=mesh)
+            )["x"]
+        if cell.kind == "prefill":
+            step = steps_mod.make_prefill_step(scfg, with_cross=cross is not None)
+            tok = specs["tokens"]
+            sp = scfg.shard_mode == "dp_sp"
+            b_spec = _spec_tree({"tokens": tok}, mesh,
+                                lambda t: sharding.batch_specs(t, mesh=mesh, seq_parallel=sp))["tokens"]
+            # prefill fills a decode cache sized to the prompt
+            c_shapes = steps_mod.cache_shapes(scfg, cell.global_batch, cell.seq_len)
+            c_spec = _spec_tree(c_shapes, mesh, lambda t: sharding.cache_specs(t, scfg, mesh=mesh))
+            args = [p_shapes, tok, c_shapes]
+            in_sh = [p_spec, b_spec, c_spec]
+            if cross is not None:
+                args.append(cross)
+                in_sh.append(cross_spec)
+            with mesh:
+                jitted = jax.jit(
+                    step,
+                    in_shardings=tuple(in_sh),
+                    out_shardings=(None, c_spec),
+                )
+                lowered = jitted.lower(*args)
+                compiled = lowered.compile()
+            mode = "prefill/bf16"
+        else:  # decode
+            c_shapes = steps_mod.cache_shapes(scfg, cell.global_batch, cell.seq_len)
+            c_spec = _spec_tree(c_shapes, mesh, lambda t: sharding.cache_specs(t, scfg, mesh=mesh))
+            tok = specs["tokens"]
+            pos = specs["position"]
+            b_spec = _spec_tree({"tokens": tok}, mesh, lambda t: sharding.batch_specs(t, mesh=mesh))["tokens"]
+            step = steps_mod.make_decode_step(scfg, with_cross=cross is not None)
+            args = [p_shapes, tok, pos, c_shapes]
+            in_sh = [p_spec, b_spec, None, c_spec]
+            if cross is not None:
+                args.append(cross)
+                in_sh.append(cross_spec)
+            with mesh:
+                jitted = jax.jit(
+                    step,
+                    in_shardings=tuple(in_sh),
+                    out_shardings=(None, c_spec),
+                )
+                lowered = jitted.lower(*args)
+                compiled = lowered.compile()
+            mode = "decode/bf16"
+
+    compile_s = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    mem = None
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:  # noqa: BLE001 — not implemented on all backends
+        mem = None
+    hlo = compiled.as_text()
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    report = build_report(
+        cell=f"{arch}×{shape_name}×{'2x16x16' if multi_pod else '16x16'}",
+        chips=chips,
+        flops_per_device=flops_dev,
+        hbm_bytes_per_device=bytes_dev,
+        hlo_text=hlo,
+        model_flops=steps_mod.model_flops_for_cell(cfg, cell),
+        bytes_per_device=getattr(mem, "temp_size_in_bytes", None),
+    )
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "mode": mode,
+        "compile_s": round(compile_s, 1),
+        "flops_per_device": flops_dev,
+        "raw_bytes_per_device": bytes_dev,
+        "fused_bytes_per_device": report.hbm_bytes_global / chips,
+        "collective_wire_bytes_per_dev": report.collective_wire_bytes_per_dev,
+        "collective_count": report.collective_count,
+        "collectives_by_kind": {k: float(v) for k, v in report.by_kind.items()},
+        "compute_s": report.compute_s,
+        "memory_s": report.memory_s,
+        "collective_s": report.collective_s,
+        "dominant": report.dominant,
+        "model_flops": report.model_flops,
+        "useful_flops_ratio": report.useful_flops_ratio,
+        "roofline_fraction": report.roofline_fraction,
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                record[attr] = int(v)
+    record["residency"] = steps_mod.estimate_residency(
+        cfg, cell, chips=chips, fsdp=use_fsdp,
+        optimizer=(mode.split("/")[1].split("+")[0] if cell.kind == "train" else "adamw"),
+    )
+    return record, lowered, compiled
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--optimizer", default="auto")
+    ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--out", default=None, help="directory for per-cell json records")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose record already exists in --out")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=val (bool/int/float), e.g. "
+                         "--set opt_attn_layout=true  (§Perf hillclimbs)")
+    ap.add_argument("--tag", default="", help="suffix for output record files")
+    args = ap.parse_args(argv)
+
+    extra_cfg = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            extra_cfg[k] = v.lower() == "true"
+        else:
+            try:
+                extra_cfg[k] = int(v)
+            except ValueError:
+                try:
+                    extra_cfg[k] = float(v)
+                except ValueError:
+                    extra_cfg[k] = v
+
+    cells = []
+    archs = [args.arch.replace("-", "_")] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    failures = 0
+    for arch, shape_name, multi in cells:
+        key = (arch, shape_name)
+        tag = f"{arch} × {shape_name} × {'multi' if multi else 'single'}"
+        if key in SKIPS:
+            print(f"SKIP  {tag}: {SKIPS[key]}", flush=True)
+            continue
+        mesh_tag = "2x16x16" if multi else "16x16"
+        if args.skip_existing and args.out and os.path.exists(
+            os.path.join(args.out, f"{arch}__{shape_name}__{mesh_tag}.json")
+        ):
+            print(f"HAVE  {tag}", flush=True)
+            continue
+        try:
+            record, lowered, compiled = lower_cell(
+                arch, shape_name, multi_pod=multi,
+                optimizer_name=args.optimizer, fsdp=args.fsdp,
+                extra_cfg=extra_cfg or None,
+            )
+            print(
+                f"OK    {tag}: compute={record['compute_s']*1e3:.2f}ms "
+                f"memory={record['memory_s']*1e3:.2f}ms "
+                f"collective={record['collective_s']*1e3:.2f}ms "
+                f"dominant={record['dominant']} "
+                f"MFU@bound={record['roofline_fraction']:.1%} "
+                f"compile={record['compile_s']}s"
+            )
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                suffix = f"__{args.tag}" if args.tag else ""
+                fname = f"{arch}__{shape_name}__{record['mesh']}{suffix}.json"
+                with open(os.path.join(args.out, fname), "w") as f:
+                    json.dump(record, f, indent=1)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"FAIL  {tag}: {type(e).__name__}: {e}")
+            traceback.print_exc(limit=4)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model substrate: transformer families, SSM/RG-LRU blocks, paper CNNs."""
+
+from . import attention, cnn, layers, moe, rglru, ssm, transformer

@@ -1,0 +1,342 @@
+"""Attention: GQA/MQA, local windows, cross-attention, softcap, KV caches.
+
+Training/prefill paths use a double-blocked online-softmax ("flash")
+attention written with ``lax.scan`` so activation memory is O(block²) rather
+than O(T·S) — required for the 32k prefill cells to fit HBM.  Decode uses a
+single fused cache-attention step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import apply_rope, cdtype, pdtype, softcap
+
+NEG_INF = -1e30
+POS_SENTINEL = 1 << 30  # key-position pad: fails every validity check
+
+
+# --------------------------------------------------------------- parameters
+
+def n_heads_eff(cfg: ModelConfig) -> int:
+    """Query-head count after optional TP padding (exact numerics: the extra
+    heads have zero wq rows and zero wo columns)."""
+    return max(cfg.pad_heads_to, cfg.n_heads) if cfg.pad_heads_to else cfg.n_heads
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d, H, K, hd = cfg.d_model, n_heads_eff(cfg), cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, H * hd), pdtype(cfg)) * sc,
+        "wk": jax.random.normal(ks[1], (d, K * hd), pdtype(cfg)) * sc,
+        "wv": jax.random.normal(ks[2], (d, K * hd), pdtype(cfg)) * sc,
+        "wo": jax.random.normal(ks[3], (H * hd, d), pdtype(cfg)) * ((H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), pdtype(cfg))
+        p["bk"] = jnp.zeros((K * hd,), pdtype(cfg))
+        p["bv"] = jnp.zeros((K * hd,), pdtype(cfg))
+    return p
+
+
+def _proj(p, x, cfg: ModelConfig, *, cross_from=None):
+    """→ q [B,T,H,hd], k,v [B,S,K,hd]."""
+    dt = cdtype(cfg)
+    B, T, _ = x.shape
+    H, K, hd = n_heads_eff(cfg), cfg.n_kv_heads, cfg.hd
+    kv_src = x if cross_from is None else cross_from
+    S = kv_src.shape[1]
+    q = x @ p["wq"].astype(dt)
+    k = kv_src @ p["wk"].astype(dt)
+    v = kv_src @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return (
+        q.reshape(B, T, H, hd),
+        k.reshape(B, S, K, hd),
+        v.reshape(B, S, K, hd),
+    )
+
+
+# --------------------------------------------------------- flash attention
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    q_positions: jnp.ndarray | None = None,
+    kv_positions: jnp.ndarray | None = None,
+    bq: int = 512,
+    bk: int = 512,
+    remat_inner: bool = False,
+) -> jnp.ndarray:
+    """Double-blocked online-softmax attention.
+
+    q [B,T,H,D]; k,v [B,S,K,D] with H = K·G (GQA).  Positions are absolute
+    ([T]/[S] int32); local windows keep keys with qpos-window < kpos <= qpos.
+    ``remat_inner`` checkpoints the kv-step so its probability block is
+    recomputed in the backward pass (flash-style backward).
+    """
+    B, T, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = D ** -0.5
+    in_dtype = q.dtype
+
+    if q_positions is None:
+        q_positions = jnp.arange(T, dtype=jnp.int32)
+    if kv_positions is None:
+        kv_positions = jnp.arange(S, dtype=jnp.int32)
+
+    bq = min(bq, T)
+    bk = min(bk, S)
+    padT = (-T) % bq
+    padS = (-S) % bk
+    if padT:
+        q = jnp.pad(q, ((0, 0), (0, padT), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, padT))
+    if padS:
+        k = jnp.pad(k, ((0, 0), (0, padS), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padS), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(
+            kv_positions, (0, padS), constant_values=POS_SENTINEL
+        )
+    Tp, Sp = T + padT, S + padS
+    nq, nk = Tp // bq, Sp // bk
+
+    # [nq, B, K, G, bq, D] / [nk, B, K, bk, D]
+    qb = q.reshape(B, nq, bq, K, G, D).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(B, nk, bk, K, D).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, bk, K, D).transpose(1, 0, 3, 2, 4)
+    qpos_b = q_positions.reshape(nq, bq)
+    kpos_b = kv_positions.reshape(nk, bk)
+
+    def one_q_block(_, xs):
+        qi, qpos = xs  # [B,K,G,bq,D], [bq]
+        o0 = jnp.zeros((B, K, G, bq, D), jnp.float32)
+        m0 = jnp.full((B, K, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, bq), jnp.float32)
+
+        def one_kv_block(carry, ys):
+            o, m, l = carry
+            ki, vi, kpos = ys  # [B,K,bk,D], [bk]
+            s = jnp.einsum(
+                "bkgqd,bksd->bkgqs", qi, ki, preferred_element_type=jnp.float32
+            ) * scale
+            if attn_softcap:
+                s = attn_softcap * jnp.tanh(s / attn_softcap)
+            valid = kpos[None, :] < POS_SENTINEL // 2
+            if causal:
+                valid = valid & (kpos[None, :] <= qpos[:, None])
+            if window:
+                valid = valid & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pmat = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + pmat.sum(axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", pmat.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32,
+            )
+            return (o_new, m_new, l_new), None
+
+        if remat_inner:
+            one_kv_block = jax.checkpoint(one_kv_block)
+        (o, m, l), _ = jax.lax.scan(one_kv_block, (o0, m0, l0), (kb, vb, kpos_b))
+        o = o / jnp.maximum(l, 1e-20)[..., None]
+        return None, o.astype(in_dtype)
+
+    _, ob = jax.lax.scan(one_q_block, None, (qb, qpos_b))
+    # [nq, B, K, G, bq, D] → [B, T, H, D]
+    out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, Tp, H, D)
+    return out[:, :T]
+
+
+# ----------------------------------------------------------------- decode
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, 1, H, D]
+    k_cache: jnp.ndarray,  # [B, S, K, D]
+    v_cache: jnp.ndarray,
+    kv_positions: jnp.ndarray,  # [S] absolute positions (-1 = empty)
+    position: jnp.ndarray,  # scalar: current decode position
+    *,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+) -> jnp.ndarray:
+    B, _, H, D = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    scale = D ** -0.5
+    qh = q.reshape(B, K, G, D)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qh, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    if attn_softcap:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    valid = (kv_positions >= 0) & (kv_positions <= position)
+    if window:
+        valid = valid & (kv_positions > position - window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ------------------------------------------------------------ full blocks
+
+def attention_block(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    kind: str,  # global | local | cross
+    positions: jnp.ndarray,
+    *,
+    cross_embeds: jnp.ndarray | None = None,
+    cache: dict | None = None,
+    decode_pos: jnp.ndarray | None = None,
+):
+    """Returns (out, new_cache_entry_or_None).
+
+    Train/prefill: cache is None → flash path (a fresh cache entry is built
+    when ``decode_pos is None`` and the caller asked via cache={} sentinel).
+    Decode: cache holds {k, v, pos} (self) and x is [B, 1, d].
+    """
+    dt = cdtype(cfg)
+    B, T, _ = x.shape
+    window = cfg.window if kind == "local" else 0
+
+    if cache is not None and decode_pos is not None and kind != "cross":
+        # ---- one-token decode against the ring cache
+        q, k_new, v_new = _proj(p, x, cfg)
+        q = apply_rope(q, decode_pos[None, None].astype(jnp.int32) * jnp.ones((B, 1), jnp.int32), cfg.rope_theta)
+        k_new = apply_rope(k_new, decode_pos[None, None] * jnp.ones((B, 1), jnp.int32), cfg.rope_theta)
+        S_c = cache["k"].shape[1]
+        slot = (decode_pos % S_c).astype(jnp.int32)
+        if cfg.opt_kv_quant:
+            # int8 KV: symmetric per-(token, head) scales; the dequant fuses
+            # into the attention dots on TPU → HBM reads int8, not bf16
+            kq, ksc = _quant_kv(k_new)
+            vq, vsc = _quant_kv(v_new)
+            k_cache = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+            k_sc = jax.lax.dynamic_update_slice(cache["k_scale"], ksc, (0, slot, 0))
+            v_sc = jax.lax.dynamic_update_slice(cache["v_scale"], vsc, (0, slot, 0))
+            k_att = k_cache.astype(dt) * k_sc[..., None].astype(dt)
+            v_att = v_cache.astype(dt) * v_sc[..., None].astype(dt)
+            new_cache = {"k": k_cache, "v": v_cache, "k_scale": k_sc, "v_scale": v_sc}
+        else:
+            k_att = k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+            v_att = v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+            new_cache = {"k": k_cache, "v": v_cache}
+        pos_cache = jax.lax.dynamic_update_slice(
+            cache["pos"], decode_pos[None].astype(jnp.int32), (slot,)
+        )
+        new_cache["pos"] = pos_cache
+        o = decode_attention(
+            q, k_att, v_att, pos_cache, decode_pos,
+            window=window, attn_softcap=cfg.attn_softcap,
+        )
+        out = o.reshape(B, T, -1) @ p["wo"].astype(dt)
+        return out, new_cache
+
+    if kind == "cross":
+        assert cross_embeds is not None
+        q, k, v = _proj(p, x, cfg, cross_from=cross_embeds.astype(dt))
+        o = flash_attention(
+            q, k, v, causal=False, attn_softcap=cfg.attn_softcap,
+            q_positions=positions,
+            kv_positions=jnp.arange(k.shape[1], dtype=jnp.int32),
+            remat_inner=cfg.opt_flash_remat, bq=cfg.attn_bq, bk=cfg.attn_bk,
+        )
+        out = o.reshape(B, T, -1) @ p["wo"].astype(dt)
+        return out, None  # cross kv is recomputed per step (see DESIGN.md)
+
+    # ---- training / prefill self-attention
+    q, k, v = _proj(p, x, cfg)
+    q = apply_rope(q, positions[None, :] * jnp.ones((B, 1), jnp.int32), cfg.rope_theta)
+    k = apply_rope(k, positions[None, :] * jnp.ones((B, 1), jnp.int32), cfg.rope_theta)
+    k_att, v_att = k, v
+    if cfg.opt_attn_layout and n_heads_eff(cfg) != cfg.n_kv_heads:
+        # head-aligned layout: repeating KV keeps every einsum dim sharded
+        # like q's heads — GSPMD stops resharding inside the flash blocks
+        g = n_heads_eff(cfg) // cfg.n_kv_heads
+        k_att = jnp.repeat(k, g, axis=2)
+        v_att = jnp.repeat(v, g, axis=2)
+    o = flash_attention(
+        q, k_att, v_att, causal=True, window=window, attn_softcap=cfg.attn_softcap,
+        q_positions=positions, kv_positions=positions,
+        remat_inner=cfg.opt_flash_remat, bq=cfg.attn_bq, bk=cfg.attn_bk,
+    )
+    out = o.reshape(B, T, -1) @ p["wo"].astype(dt)
+
+    new_cache = None
+    if cache is not None:  # prefill: populate the cache
+        S_c = cache["k"].shape[1]
+        if T >= S_c:
+            k_w, v_w = k[:, -S_c:], v[:, -S_c:]
+            pos_w = positions[-S_c:]
+            slots = (pos_w % S_c).astype(jnp.int32)
+        else:
+            k_w, v_w, pos_w = k, v, positions
+            slots = (pos_w % S_c).astype(jnp.int32)
+        pos_cache = cache["pos"].at[slots].set(pos_w.astype(jnp.int32))
+        if cfg.opt_kv_quant:
+            kq, ksc = _quant_kv(k_w)
+            vq, vsc = _quant_kv(v_w)
+            new_cache = {
+                "k": cache["k"].at[:, slots].set(kq),
+                "v": cache["v"].at[:, slots].set(vq),
+                "k_scale": cache["k_scale"].at[:, slots].set(ksc),
+                "v_scale": cache["v_scale"].at[:, slots].set(vsc),
+                "pos": pos_cache,
+            }
+        else:
+            new_cache = {
+                "k": cache["k"].at[:, slots].set(k_w),
+                "v": cache["v"].at[:, slots].set(v_w),
+                "pos": pos_cache,
+            }
+    return out, new_cache
+
+
+def _quant_kv(x):
+    """x [B, T, K, hd] → (int8 [B,T,K,hd], scales f32 [B,T,K])."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def init_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int) -> dict:
+    """Zeroed ring cache for one attention layer."""
+    S_c = min(seq_len, cfg.window) if kind == "local" else seq_len
+    K, hd = cfg.n_kv_heads, cfg.hd
+    dt = cdtype(cfg)
+    if cfg.opt_kv_quant:
+        return {
+            "k": jnp.zeros((batch, S_c, K, hd), jnp.int8),
+            "v": jnp.zeros((batch, S_c, K, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, S_c, K), jnp.float32),
+            "v_scale": jnp.zeros((batch, S_c, K), jnp.float32),
+            "pos": jnp.full((S_c,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, S_c, K, hd), dt),
+        "v": jnp.zeros((batch, S_c, K, hd), dt),
+        "pos": jnp.full((S_c,), -1, jnp.int32),
+    }

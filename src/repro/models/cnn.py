@@ -1,0 +1,239 @@
+"""The paper's CNN benchmark models (§5): AlexNet, GoogLeNet, ResNet-50.
+
+Pure-JAX functional implementations with analytic FLOP/byte accounting used
+by benchmarks/fig6_cnn_infer.py and fig7_cnn_train.py (the PyTorch+Nsight
+methodology of the paper maps to jit + cost_analysis here, DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- primitives
+
+
+def conv2d(x, w, b=None, stride=1, padding="SAME"):
+    out = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + b
+    return out
+
+
+def maxpool(x, k, stride, padding="VALID"):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), padding
+    )
+
+
+def avgpool_global(x):
+    return x.mean(axis=(1, 2))
+
+
+def batchnorm(x, p, train: bool):
+    if train:
+        mean = x.mean(axis=(0, 1, 2))
+        var = x.var(axis=(0, 1, 2))
+    else:
+        mean, var = p["mean"], p["var"]
+    inv = jax.lax.rsqrt(var + 1e-5)
+    return (x - mean) * inv * p["scale"] + p["bias"]
+
+
+def _init_conv(key, k, cin, cout):
+    fan_in = k * k * cin
+    return jax.random.normal(key, (k, k, cin, cout), jnp.float32) * (2.0 / fan_in) ** 0.5
+
+
+def _init_bn(c):
+    return {
+        "scale": jnp.ones((c,), jnp.float32),
+        "bias": jnp.zeros((c,), jnp.float32),
+        "mean": jnp.zeros((c,), jnp.float32),
+        "var": jnp.ones((c,), jnp.float32),
+    }
+
+
+def _init_fc(key, cin, cout):
+    return {
+        "w": jax.random.normal(key, (cin, cout), jnp.float32) * cin ** -0.5,
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+@dataclasses.dataclass
+class FlopCounter:
+    flops: float = 0.0
+    weight_bytes: float = 0.0
+    act_bytes: float = 0.0
+
+    def conv(self, hw_out, k, cin, cout):
+        self.flops += 2.0 * hw_out * hw_out * cout * k * k * cin
+        self.weight_bytes += 4.0 * k * k * cin * cout
+
+    def fc(self, cin, cout):
+        self.flops += 2.0 * cin * cout
+        self.weight_bytes += 4.0 * cin * cout
+
+
+# ------------------------------------------------------------------ AlexNet
+
+ALEXNET = [  # (k, cout, stride, pool_after)
+    (11, 96, 4, True), (5, 256, 1, True), (3, 384, 1, False),
+    (3, 384, 1, False), (3, 256, 1, True),
+]
+
+
+def init_alexnet(key, n_classes=1000):
+    ks = jax.random.split(key, 9)
+    p = {"conv": [], "fc": []}
+    cin = 3
+    for i, (k, cout, s, _) in enumerate(ALEXNET):
+        p["conv"].append({"w": _init_conv(ks[i], k, cin, cout), "b": jnp.zeros((cout,))})
+        cin = cout
+    p["fc"] = [
+        _init_fc(ks[5], 256 * 6 * 6, 4096),
+        _init_fc(ks[6], 4096, 4096),
+        _init_fc(ks[7], 4096, n_classes),
+    ]
+    return p
+
+
+def alexnet(p, x, train=False):
+    for (k, cout, s, pool), cp in zip(ALEXNET, p["conv"]):
+        x = jax.nn.relu(conv2d(x, cp["w"], cp["b"], stride=s, padding="SAME" if k != 11 else [(2, 2), (2, 2)]))
+        if pool:
+            x = maxpool(x, 3, 2)
+    x = x.reshape(x.shape[0], -1)
+    for i, fp in enumerate(p["fc"]):
+        x = x @ fp["w"] + fp["b"]
+        if i < 2:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ----------------------------------------------------------------- ResNet50
+
+RESNET50_STAGES = [(3, 64, 256, 1), (4, 128, 512, 2), (6, 256, 1024, 2), (3, 512, 2048, 2)]
+
+
+def init_resnet50(key, n_classes=1000):
+    keys = iter(jax.random.split(key, 200))
+    p = {"stem": {"w": _init_conv(next(keys), 7, 3, 64), "bn": _init_bn(64)}, "stages": []}
+    cin = 64
+    for n_blocks, mid, cout, stride in RESNET50_STAGES:
+        blocks = []
+        for b in range(n_blocks):
+            s = stride if b == 0 else 1
+            blk = {
+                "conv1": {"w": _init_conv(next(keys), 1, cin, mid), "bn": _init_bn(mid)},
+                "conv2": {"w": _init_conv(next(keys), 3, mid, mid), "bn": _init_bn(mid)},
+                "conv3": {"w": _init_conv(next(keys), 1, mid, cout), "bn": _init_bn(cout)},
+            }
+            if b == 0:
+                blk["proj"] = {"w": _init_conv(next(keys), 1, cin, cout), "bn": _init_bn(cout)}
+            blocks.append(blk)
+            cin = cout
+        p["stages"].append(blocks)
+    p["fc"] = _init_fc(next(keys), 2048, n_classes)
+    return p
+
+
+def resnet50(p, x, train=False):
+    x = conv2d(x, p["stem"]["w"], stride=2)
+    x = jax.nn.relu(batchnorm(x, p["stem"]["bn"], train))
+    x = maxpool(x, 3, 2, padding="SAME")
+    for stage, (_, _, _, stage_stride) in zip(p["stages"], RESNET50_STAGES):
+        for b, blk in enumerate(stage):
+            s = stage_stride if b == 0 else 1
+            h = jax.nn.relu(batchnorm(conv2d(x, blk["conv1"]["w"], stride=s), blk["conv1"]["bn"], train))
+            h = jax.nn.relu(batchnorm(conv2d(h, blk["conv2"]["w"]), blk["conv2"]["bn"], train))
+            h = batchnorm(conv2d(h, blk["conv3"]["w"]), blk["conv3"]["bn"], train)
+            if "proj" in blk:
+                x = batchnorm(conv2d(x, blk["proj"]["w"], stride=s), blk["proj"]["bn"], train)
+            x = jax.nn.relu(x + h)
+    x = avgpool_global(x)
+    return x @ p["fc"]["w"] + p["fc"]["b"]
+
+
+# ---------------------------------------------------------------- GoogLeNet
+
+# (1x1, 3x3red, 3x3, 5x5red, 5x5, pool_proj) per inception block
+INCEPTION = {
+    "3a": (64, 96, 128, 16, 32, 32), "3b": (128, 128, 192, 32, 96, 64),
+    "4a": (192, 96, 208, 16, 48, 64), "4b": (160, 112, 224, 24, 64, 64),
+    "4c": (128, 128, 256, 24, 64, 64), "4d": (112, 144, 288, 32, 64, 64),
+    "4e": (256, 160, 320, 32, 128, 128), "5a": (256, 160, 320, 32, 128, 128),
+    "5b": (384, 192, 384, 48, 128, 128),
+}
+
+
+def init_googlenet(key, n_classes=1000):
+    keys = iter(jax.random.split(key, 100))
+    p = {
+        "stem1": {"w": _init_conv(next(keys), 7, 3, 64), "b": jnp.zeros((64,))},
+        "stem2": {"w": _init_conv(next(keys), 1, 64, 64), "b": jnp.zeros((64,))},
+        "stem3": {"w": _init_conv(next(keys), 3, 64, 192), "b": jnp.zeros((192,))},
+        "inception": {},
+    }
+    cin = 192
+    for name, (c1, r3, c3, r5, c5, pp) in INCEPTION.items():
+        p["inception"][name] = {
+            "b1": {"w": _init_conv(next(keys), 1, cin, c1), "b": jnp.zeros((c1,))},
+            "b3r": {"w": _init_conv(next(keys), 1, cin, r3), "b": jnp.zeros((r3,))},
+            "b3": {"w": _init_conv(next(keys), 3, r3, c3), "b": jnp.zeros((c3,))},
+            "b5r": {"w": _init_conv(next(keys), 1, cin, r5), "b": jnp.zeros((r5,))},
+            "b5": {"w": _init_conv(next(keys), 5, r5, c5), "b": jnp.zeros((c5,))},
+            "bp": {"w": _init_conv(next(keys), 1, cin, pp), "b": jnp.zeros((pp,))},
+        }
+        cin = c1 + c3 + c5 + pp
+    p["fc"] = _init_fc(next(keys), 1024, n_classes)
+    return p
+
+
+def googlenet(p, x, train=False):
+    x = jax.nn.relu(conv2d(x, p["stem1"]["w"], p["stem1"]["b"], stride=2))
+    x = maxpool(x, 3, 2, padding="SAME")
+    x = jax.nn.relu(conv2d(x, p["stem2"]["w"], p["stem2"]["b"]))
+    x = jax.nn.relu(conv2d(x, p["stem3"]["w"], p["stem3"]["b"]))
+    x = maxpool(x, 3, 2, padding="SAME")
+    for name in INCEPTION:
+        q = p["inception"][name]
+        b1 = jax.nn.relu(conv2d(x, q["b1"]["w"], q["b1"]["b"]))
+        b3 = jax.nn.relu(conv2d(jax.nn.relu(conv2d(x, q["b3r"]["w"], q["b3r"]["b"])), q["b3"]["w"], q["b3"]["b"]))
+        b5 = jax.nn.relu(conv2d(jax.nn.relu(conv2d(x, q["b5r"]["w"], q["b5r"]["b"])), q["b5"]["w"], q["b5"]["b"]))
+        bp = jax.nn.relu(conv2d(maxpool(x, 3, 1, padding="SAME"), q["bp"]["w"], q["bp"]["b"]))
+        x = jnp.concatenate([b1, b3, b5, bp], axis=-1)
+        if name in ("3b", "4e"):
+            x = maxpool(x, 3, 2, padding="SAME")
+    x = avgpool_global(x)
+    return x @ p["fc"]["w"] + p["fc"]["b"]
+
+
+MODELS = {
+    "alexnet": (init_alexnet, alexnet),
+    "googlenet": (init_googlenet, googlenet),
+    "resnet50": (init_resnet50, resnet50),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def model_flops(name: str, img: int = 224) -> dict:
+    """FLOPs/weight-bytes/activation-bytes per image via jax cost analysis."""
+    init, apply = MODELS[name]
+    params = init(jax.random.PRNGKey(0))
+    x = jax.ShapeDtypeStruct((1, img, img, 3), jnp.float32)
+    lowered = jax.jit(lambda p, x: apply(p, x)).lower(params, x)
+    cost = lowered.compile().cost_analysis()
+    nparams = sum(int(p.size) for p in jax.tree.leaves(params))
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "params": nparams,
+    }

@@ -1,0 +1,115 @@
+"""Shared neural-net building blocks (pure-functional, no framework deps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------- norms
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d: int, dtype) -> jnp.ndarray:
+    # stored as a delta around 1 (gemma convention; works for all)
+    return jnp.zeros((d,), dtype)
+
+
+# ---------------------------------------------------------------- softcap
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """gemma-2 logit soft-capping: cap·tanh(x/cap)."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rotary
+
+def rope_frequencies(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., T, n, hd]; positions: broadcastable to [..., T]."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, hd/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d ** -0.5
+    scale_out = ff ** -0.5
+    p = {
+        "w_up": jax.random.normal(k1, (d, ff), pdtype(cfg)) * scale_in,
+        "w_down": jax.random.normal(k2, (ff, d), pdtype(cfg)) * scale_out,
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = jax.random.normal(k3, (d, ff), pdtype(cfg)) * scale_in
+    return p
+
+
+def apply_mlp(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = cdtype(cfg)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    up = x @ p["w_up"].astype(dt)
+    if cfg.mlp_gated:
+        gate = act(x @ p["w_gate"].astype(dt))
+        h = gate * up
+    else:
+        h = act(up)
+    return h @ p["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------- embedding
+
+def init_embed(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": jax.random.normal(k1, (cfg.vocab, cfg.d_model), pdtype(cfg)) * 0.02}
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(k2, (cfg.d_model, cfg.vocab), pdtype(cfg)) * (
+            cfg.d_model ** -0.5
+        )
+    return p
+
+
+def embed_tokens(p: dict, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(p["tok"].astype(cdtype(cfg)), tokens, axis=0)
+    # gemma-style sqrt(d) scaling keeps rms ~1 under tied embeddings
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdtype(cfg))
+    return x
+
+
+def lm_head(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = x @ p["tok"].astype(cdtype(cfg)).T
+    else:
+        logits = x @ p["head"].astype(cdtype(cfg))
+    return softcap(logits, cfg.final_softcap)

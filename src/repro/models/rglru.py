@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma [arXiv:2402.19427]).
+
+Gated linear recurrence h_t = a_t ⊙ h_{t-1} + √(1-a_t²) ⊙ (i_t ⊙ x_t) with
+a_t = exp(-c·softplus(Λ)·r_t); prefill/train uses ``associative_scan``
+(log-depth), decode carries a [B, w] state — O(1) per token, which is what
+makes the 500k-context cell feasible (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import cdtype, pdtype
+
+_C = 8.0  # Griffin's recurrence-gate sharpness constant
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d, w, W = cfg.d_model, cfg.lru_dim, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    sc = d ** -0.5
+    return {
+        "w_x": jax.random.normal(ks[0], (d, w), pdtype(cfg)) * sc,
+        "w_y": jax.random.normal(ks[1], (d, w), pdtype(cfg)) * sc,
+        "conv_w": jax.random.normal(ks[2], (W, w), pdtype(cfg)) * 0.1,
+        "conv_b": jnp.zeros((w,), pdtype(cfg)),
+        "w_r": jax.random.normal(ks[3], (w, w), jnp.float32) * w ** -0.5,
+        "w_i": jax.random.normal(ks[4], (w, w), jnp.float32) * w ** -0.5,
+        # Λ init so that a^c ∈ (0.9, 0.999) at r=1 (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)),
+        "w_out": jax.random.normal(ks[5], (w, d), pdtype(cfg)) * w ** -0.5,
+    }
+
+
+def _gates(p, xc):
+    """xc [..., w] fp32 → (log_a, gated_input_scale)."""
+    r = jax.nn.sigmoid(xc @ p["w_r"])
+    i = jax.nn.sigmoid(xc @ p["w_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r  # [..., w], <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i
+
+
+def rglru_block(p: dict, x: jnp.ndarray, cfg: ModelConfig, state: dict | None = None):
+    """Returns (y [B,T,d], new_state_or_None).
+
+    state (decode): {"conv": [B, W-1, w], "h": [B, w]}."""
+    dt_ = cdtype(cfg)
+    B, T, _ = x.shape
+    w, W = cfg.lru_dim, cfg.conv_width
+
+    xb = x @ p["w_x"].astype(dt_)  # recurrent branch
+    yb = jax.nn.gelu(x @ p["w_y"].astype(dt_))  # gate branch
+
+    if state is not None and T == 1:
+        window = jnp.concatenate([state["conv"], xb], axis=1)  # [B, W, w]
+        xc = (window * p["conv_w"].astype(dt_)[None]).sum(1) + p["conv_b"].astype(dt_)
+        xc = xc.astype(jnp.float32)
+        a, scale = _gates(p, xc)
+        h = a * state["h"] + scale * xc
+        out = (h.astype(dt_)[:, None] * yb) @ p["w_out"].astype(dt_)
+        return out, {"conv": window[:, 1:], "h": h}
+
+    # prefill / train: causal depthwise conv then associative scan over T
+    xp = jnp.pad(xb, ((0, 0), (W - 1, 0), (0, 0)))
+    if state is not None:
+        xp = jax.lax.dynamic_update_slice(xp, state["conv"], (0, 0, 0))
+    xc = jax.lax.conv_general_dilated(
+        xp, p["conv_w"].astype(dt_)[:, None, :], (1,), "VALID",
+        dimension_numbers=("NTC", "TIO", "NTC"), feature_group_count=w,
+    ) + p["conv_b"].astype(dt_)
+    xc32 = xc.astype(jnp.float32)
+    a, scale = _gates(p, xc32)
+    b = scale * xc32
+    if state is not None:
+        # fold the carried h into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * state["h"])
+
+    def compose(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(compose, (a, b), axis=1)
+    out = (h.astype(dt_) * yb) @ p["w_out"].astype(dt_)
+
+    new_state = None
+    if state is not None:
+        conv_tail = xb[:, -(W - 1):] if T >= W - 1 else jnp.concatenate(
+            [state["conv"][:, T:], xb], axis=1
+        )
+        new_state = {"conv": conv_tail, "h": h[:, -1]}
+    return out, new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_dim), cdtype(cfg)),
+        "h": jnp.zeros((batch, cfg.lru_dim), jnp.float32),
+    }

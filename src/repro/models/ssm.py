@@ -1,0 +1,184 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked algorithm as a ``lax.scan`` over time chunks: within a chunk the
+quadratic "attention-like" term runs on the MXU; across chunks a [nh, hp, ds]
+state is carried — O(1) decode memory, linear-time prefill.  Single B/C group
+(mamba-2 default), gated RMSNorm before the output projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import cdtype, pdtype, rms_norm
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, ds, nh, w = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.conv_width
+    conv_ch = di + 2 * ds
+    ks = jax.random.split(key, 4)
+    p = {
+        # fused in-projection: z (di) | x (di) | B (ds) | C (ds) | dt (nh)
+        "w_in": jax.random.normal(ks[0], (d, 2 * di + 2 * ds + nh), pdtype(cfg)) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (w, conv_ch), pdtype(cfg)) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), pdtype(cfg)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.zeros((di,), pdtype(cfg)),
+        "w_out": jax.random.normal(ks[2], (di, d), pdtype(cfg)) * di ** -0.5,
+    }
+    return p
+
+
+def _split_in(h, cfg: ModelConfig):
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = h[..., :di]
+    xin = h[..., di : 2 * di]
+    Bc = h[..., 2 * di : 2 * di + ds]
+    Cc = h[..., 2 * di + ds : 2 * di + 2 * ds]
+    dt = h[..., 2 * di + 2 * ds :]
+    return z, xin, Bc, Cc, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x [B,T,C], w [W,C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],  # [W, 1, C]
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NTC", "TIO", "NTC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+def ssm_block(p: dict, x: jnp.ndarray, cfg: ModelConfig, state: dict | None = None):
+    """Returns (y [B,T,d], new_state_or_None).
+
+    state (decode): {"conv": [B, W-1, conv_ch], "h": [B, nh, hp, ds]} — pass
+    T=1 inputs for one-token decode; T>1 runs the chunked prefill/train path
+    (returning the final state when ``state`` is given)."""
+    dt_ = cdtype(cfg)
+    B, T, _ = x.shape
+    di, ds, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_headdim
+    W = cfg.conv_width
+
+    hin = x @ p["w_in"].astype(dt_)
+    z, xin, Bc, Cc, dtp = _split_in(hin, cfg)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+
+    if state is not None and T == 1:
+        # ---- one-token decode
+        window = jnp.concatenate([state["conv"], conv_in], axis=1)  # [B, W, C]
+        conv_out = (window * p["conv_w"].astype(dt_)[None]).sum(1, keepdims=True)
+        conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(dt_))
+        xin_c, Bc_c, Cc_c = (
+            conv_out[..., :di], conv_out[..., di : di + ds], conv_out[..., di + ds :]
+        )
+        dt = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B, nh]
+        A = -jnp.exp(p["A_log"])  # [nh]
+        dA = jnp.exp(dt * A)  # [B, nh]
+        xh = xin_c.reshape(B, nh, hp).astype(jnp.float32)
+        Bf = Bc_c[:, 0].astype(jnp.float32)  # [B, ds]
+        Cf = Cc_c[:, 0].astype(jnp.float32)
+        h_new = dA[..., None, None] * state["h"] + jnp.einsum(
+            "bh,bs,bhp->bhps", dt, Bf, xh
+        )
+        y = jnp.einsum("bs,bhps->bhp", Cf, h_new) + p["D"][None, :, None] * xh
+        y = y.reshape(B, 1, di).astype(dt_)
+        y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+        out = y @ p["w_out"].astype(dt_)
+        return out, {"conv": window[:, 1:], "h": h_new}
+
+    # ---- chunked prefill / train
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_)))
+    xin_c = conv_out[..., :di]
+    Bc_c = conv_out[..., di : di + ds].astype(jnp.float32)
+    Cc_c = conv_out[..., di + ds :].astype(jnp.float32)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])  # [B,T,nh]
+    A = -jnp.exp(p["A_log"])
+    logdA = dt * A  # [B,T,nh], <= 0
+
+    Q = min(cfg.ssm_chunk, T)
+    pad = (-T) % Q
+    if pad:
+        xin_c = jnp.pad(xin_c, ((0, 0), (0, pad), (0, 0)))
+        Bc_c = jnp.pad(Bc_c, ((0, 0), (0, pad), (0, 0)))
+        Cc_c = jnp.pad(Cc_c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        logdA = jnp.pad(logdA, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Q
+
+    xh = xin_c.reshape(B, nc, Q, nh, hp).astype(jnp.float32)
+    Bb = Bc_c.reshape(B, nc, Q, ds)
+    Cb = Cc_c.reshape(B, nc, Q, ds)
+    dtb = dt.reshape(B, nc, Q, nh)
+    lab = logdA.reshape(B, nc, Q, nh)
+
+    # scan over chunks; carry h [B, nh, hp, ds]
+    h0 = (
+        state["h"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, nh, hp, ds), jnp.float32)
+    )
+
+    def chunk_step(h, xs):
+        xc, Bcc, Ccc, dtc, lac = xs  # [B,Q,...]
+        la = jnp.cumsum(lac, axis=1)  # inclusive cumulative log-decay [B,Q,nh]
+        # inter-chunk: y_inter[i] = exp(la_i) * C_i · h
+        y_inter = jnp.einsum("bqs,bhps->bqhp", Ccc, h) * jnp.exp(la)[..., None]
+        # intra-chunk: scores[i,j] = (C_i·B_j) exp(la_i - la_j) dt_j  (j<=i)
+        cb = jnp.einsum("bqs,bps->bqp", Ccc, Bcc)  # [B,Q,Q]
+        tri = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+        # mask *inside* the exp: la_i - la_j > 0 on the upper triangle would
+        # overflow to inf (inf·0 = NaN after tri-masking)
+        ldiff = jnp.where(
+            tri[None, :, :, None], la[:, :, None, :] - la[:, None, :, :], -jnp.inf
+        )
+        scores = cb[..., None] * jnp.exp(ldiff) * dtc[:, None, :, :]
+        y_intra = jnp.einsum("bqph,bphx->bqhx", scores, xc)
+        # state to next chunk: h' = exp(la_last) h + Σ_j exp(la_last-la_j) dt_j B_j⊗x_j
+        la_last = la[:, -1:, :]  # [B,1,nh]
+        w = jnp.exp(la_last - la) * dtc  # [B,Q,nh]
+        h_new = jnp.exp(la_last[:, 0])[:, :, None, None] * h + jnp.einsum(
+            "bqh,bqs,bqhp->bhps", w, Bcc, xc
+        )
+        return h_new, y_inter + y_intra
+
+    hT, yb = jax.lax.scan(
+        chunk_step, h0,
+        (
+            xh.transpose(1, 0, 2, 3, 4),
+            Bb.transpose(1, 0, 2, 3),
+            Cb.transpose(1, 0, 2, 3),
+            dtb.transpose(1, 0, 2, 3),
+            lab.transpose(1, 0, 2, 3),
+        ),
+    )
+    y = yb.transpose(1, 0, 2, 3, 4).reshape(B, Tp, nh, hp)[:, :T]
+    y = y + p["D"][None, None, :, None] * xh.reshape(B, Tp, nh, hp)[:, :T]
+    y = y.reshape(B, T, di).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(dt_)
+
+    new_state = None
+    if state is not None:
+        conv_tail = conv_in[:, -(W - 1) :] if T >= W - 1 else jnp.concatenate(
+            [state["conv"][:, T:], conv_in], axis=1
+        )
+        new_state = {"conv": conv_tail, "h": hT}
+    return out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state), cdtype(cfg)),
+        "h": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,280 @@
+"""Model assembly for all assigned families (dense/moe/ssm/hybrid/vlm/audio).
+
+Layers are grouped into the config's repeating *unit* pattern and scanned
+with stacked parameters (compile time O(1) in depth — grok's 64 layers lower
+as one scan).  A partial tail (e.g. recurrentgemma's 38 = 12×3 + 2) is
+applied unrolled.  Every layer kind returns an optional cache entry so the
+same assembly serves train, prefill and decode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import (
+    apply_mlp,
+    cdtype,
+    embed_tokens,
+    init_embed,
+    init_mlp,
+    init_rms_norm,
+    lm_head,
+    pdtype,
+    rms_norm,
+)
+
+ATTN_KINDS = ("global", "local", "cross", "moe")
+
+
+# ------------------------------------------------------------------- init
+
+def init_layer(key, kind: str, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    dt = pdtype(cfg)
+    if kind in ("global", "local", "cross"):
+        return {
+            "attn_norm": init_rms_norm(d, dt),
+            "attn": attn_mod.init_attention(ks[0], cfg),
+            "mlp_norm": init_rms_norm(d, dt),
+            "mlp": init_mlp(ks[1], cfg),
+        }
+    if kind == "moe":
+        return {
+            "attn_norm": init_rms_norm(d, dt),
+            "attn": attn_mod.init_attention(ks[0], cfg),
+            "mlp_norm": init_rms_norm(d, dt),
+            "moe": moe_mod.init_moe(ks[1], cfg),
+        }
+    if kind == "ssm":
+        return {"norm": init_rms_norm(d, dt), "ssm": ssm_mod.init_ssm(ks[0], cfg)}
+    if kind == "rec":
+        return {
+            "norm": init_rms_norm(d, dt),
+            "rec": rglru_mod.init_rglru(ks[0], cfg),
+            "mlp_norm": init_rms_norm(d, dt),
+            "mlp": init_mlp(ks[1], cfg),
+        }
+    raise ValueError(kind)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, 2 + len(cfg.unit) + len(cfg.tail))
+    params = {"embed": init_embed(keys[0], cfg), "final_norm": init_rms_norm(cfg.d_model, pdtype(cfg))}
+    units = []
+    for pos, kind in enumerate(cfg.unit):
+        pos_keys = jax.random.split(keys[1 + pos], cfg.n_units)
+        units.append(jax.vmap(lambda k, kd=kind: init_layer(k, kd, cfg))(pos_keys))
+    params["units"] = units
+    params["tail"] = [
+        init_layer(keys[1 + len(cfg.unit) + i], kind, cfg)
+        for i, kind in enumerate(cfg.tail)
+    ]
+    return params
+
+
+# ------------------------------------------------------------------ caches
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int):
+    if kind in ("global", "local", "moe"):
+        return attn_mod.init_cache(cfg, "local" if kind == "local" else "global", batch, seq_len)
+    if kind == "ssm":
+        return ssm_mod.init_ssm_state(cfg, batch)
+    if kind == "rec":
+        return rglru_mod.init_rglru_state(cfg, batch)
+    return {}  # cross: kv recomputed from cross_embeds
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    units = []
+    for kind in cfg.unit:
+        one = init_layer_cache(cfg, kind, batch, seq_len)
+        units.append(
+            jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_units,) + x.shape).copy(), one
+            )
+        )
+    tail = [init_layer_cache(cfg, kind, batch, seq_len) for kind in cfg.tail]
+    return {"units": units, "tail": tail}
+
+
+# ------------------------------------------------------------------ layers
+
+def apply_layer(
+    p: dict,
+    x: jnp.ndarray,
+    kind: str,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    *,
+    cross_embeds=None,
+    cache=None,
+    decode_pos=None,
+):
+    """Pre-norm residual block.  Returns (x, new_cache, aux)."""
+    aux = {}
+    if kind in ("global", "local", "cross", "moe"):
+        a_kind = "global" if kind == "moe" else kind
+        h, new_cache = attn_mod.attention_block(
+            p["attn"], rms_norm(x, p["attn_norm"], cfg.norm_eps), cfg, a_kind,
+            positions, cross_embeds=cross_embeds, cache=cache, decode_pos=decode_pos,
+        )
+        x = x + h
+        hn = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+        if kind == "moe":
+            h2, aux = moe_mod.apply_moe(p["moe"], hn, cfg)
+        else:
+            h2 = apply_mlp(p["mlp"], hn, cfg)
+        return x + h2, new_cache, aux
+    if kind == "ssm":
+        h, new_state = ssm_mod.ssm_block(
+            p["ssm"], rms_norm(x, p["norm"], cfg.norm_eps), cfg, state=cache
+        )
+        return x + h, new_state, aux
+    if kind == "rec":
+        h, new_state = rglru_mod.rglru_block(
+            p["rec"], rms_norm(x, p["norm"], cfg.norm_eps), cfg, state=cache
+        )
+        x = x + h
+        h2 = apply_mlp(p["mlp"], rms_norm(x, p["mlp_norm"], cfg.norm_eps), cfg)
+        return x + h2, new_state, aux
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------- forward
+
+def forward(
+    params: dict,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    cross_embeds=None,
+    caches: dict | None = None,
+    decode_pos=None,
+    start_pos: int = 0,
+):
+    """→ (logits [B,T,V], aux, new_caches_or_None)."""
+    B, T = tokens.shape
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if decode_pos is not None:
+        positions = jnp.full((T,), 0, jnp.int32)  # unused in decode path
+    else:
+        positions = jnp.arange(T, dtype=jnp.int32) + start_pos
+
+    use_cache = caches is not None
+    unit = cfg.unit
+
+    def unit_fn(carry, xs):
+        x, lb = carry
+        if use_cache:
+            p_list, c_list = xs
+        else:
+            p_list, c_list = xs, [None] * len(unit)
+        new_entries = []
+        for pos, kind in enumerate(unit):
+            x, nc, aux = apply_layer(
+                p_list[pos], x, kind, cfg, positions,
+                cross_embeds=cross_embeds, cache=c_list[pos], decode_pos=decode_pos,
+            )
+            new_entries.append(nc if nc is not None else {})
+            lb = lb + aux.get("load_balance_loss", 0.0)
+        if use_cache:
+            return (x, lb), tuple(new_entries)
+        return (x, lb), 0
+
+    if cfg.remat != "none":
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat == "dots"
+            else None
+        )
+        unit_fn = jax.checkpoint(unit_fn, policy=policy, prevent_cse=False)
+
+    lb0 = jnp.zeros((), jnp.float32)
+    if use_cache:
+        xs = (tuple(params["units"]), tuple(caches["units"]))
+    else:
+        xs = tuple(params["units"])
+    if cfg.unroll_layers:
+        carry = (x, lb0)
+        ys_list = []
+        for i in range(cfg.n_units):
+            xs_i = jax.tree.map(lambda t: t[i], xs)
+            carry, y = unit_fn(carry, xs_i)
+            ys_list.append(y)
+        (x, lb) = carry
+        if use_cache:
+            ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys_list)
+        else:
+            ys = 0
+    else:
+        (x, lb), ys = jax.lax.scan(unit_fn, (x, lb0), xs)
+
+    new_caches = None
+    if use_cache:
+        new_units = list(ys)
+        new_tail = []
+        for i, kind in enumerate(cfg.tail):
+            x, nc, aux = apply_layer(
+                params["tail"][i], x, kind, cfg, positions,
+                cross_embeds=cross_embeds, cache=caches["tail"][i], decode_pos=decode_pos,
+            )
+            new_tail.append(nc if nc is not None else {})
+            lb = lb + aux.get("load_balance_loss", 0.0)
+        new_caches = {"units": new_units, "tail": new_tail}
+    else:
+        for i, kind in enumerate(cfg.tail):
+            x, _, aux = apply_layer(
+                params["tail"][i], x, kind, cfg, positions,
+                cross_embeds=cross_embeds,
+            )
+            lb = lb + aux.get("load_balance_loss", 0.0)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(params["embed"], x, cfg)
+    return logits, {"load_balance_loss": lb}, new_caches
+
+
+# ------------------------------------------------------------------- loss
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, lb_coef: float = 0.01):
+    logits, aux, _ = forward(
+        params, batch["tokens"], cfg, cross_embeds=batch.get("cross_embeds")
+    )
+    labels = batch["labels"]
+    valid = (labels >= 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    ce = -(ll * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+    loss = ce + lb_coef * aux["load_balance_loss"]
+    return loss, {"ce": ce, **aux}
+
+
+# ----------------------------------------------------------------- serving
+
+def prefill(params, tokens, cfg: ModelConfig, caches, *, cross_embeds=None):
+    """Run the prompt through the model, filling caches.  Returns
+    (last-token logits [B,V], new_caches)."""
+    logits, _, new_caches = forward(
+        params, tokens, cfg, cross_embeds=cross_embeds, caches=caches
+    )
+    return logits[:, -1], new_caches
+
+
+def decode_step(params, tokens, position, cfg: ModelConfig, caches, *, cross_embeds=None):
+    """One-token decode: tokens [B,1], position scalar int32.  Returns
+    (logits [B,V], new_caches)."""
+    logits, _, new_caches = forward(
+        params, tokens, cfg, cross_embeds=cross_embeds, caches=caches,
+        decode_pos=position.astype(jnp.int32),
+    )
+    return logits[:, -1], new_caches

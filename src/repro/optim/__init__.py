@@ -1,0 +1,8 @@
+"""Optimizers built from scratch (no optax in the environment)."""
+
+from .adamw import adamw
+from .adafactor import adafactor
+from .clip import clip_by_global_norm, global_norm
+from .schedule import warmup_cosine
+
+__all__ = ["adamw", "adafactor", "clip_by_global_norm", "global_norm", "warmup_cosine"]

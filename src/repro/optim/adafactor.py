@@ -1,0 +1,66 @@
+"""Adafactor (factored second moments) — the memory plan for grok-scale
+training on a single pod (DESIGN.md §6): ~4 bytes/param of optimizer state
+versus AdamW's 8."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import Optimizer
+
+
+def adafactor(
+    lr: float = 1e-2,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"s": jax.tree.map(one, params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(g.shape):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = vr[..., None] * vc[..., None, :] / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True)[..., None], eps
+                )
+                u = g32 * jax.lax.rsqrt(denom + eps)
+                s_new = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(v + eps)
+                s_new = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), s_new
+
+        pairs = jax.tree.map(upd, grads, state["s"], params,
+                             is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x))
+        updates = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        s = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"s": s, "step": step}
+
+    return Optimizer(init=init, update=update)

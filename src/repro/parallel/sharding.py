@@ -1,0 +1,211 @@
+"""Sharding rules: param-path patterns → PartitionSpec (DP/FSDP/TP/EP/SP).
+
+Axes: ``pod`` (inter-pod DP), ``data`` (DP / FSDP / SP), ``model`` (TP / EP).
+GSPMD handles non-divisible dims by implicit padding (qwen's 40 heads,
+llama3.2-3b's 24 heads, grok's 8 experts — documented per config).
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+BATCH_AXES = ("pod", "data")
+
+
+def _rules(cfg: ModelConfig, fsdp: bool) -> list[tuple[str, P]]:
+    """Ordered (regex, spec); first match wins.  Paths look like
+    ``units/0/attn/wq`` or ``embed/tok``."""
+    if cfg.shard_mode == "dp_sp":
+        # replicated weights (sequence parallelism carries the model axis)
+        d = "data" if fsdp else None
+        return [(r".*", P(d))] if fsdp else [(r".*", P())]
+    if cfg.shard_mode == "zero3":
+        # pure data parallelism with fully-sharded params/grads/optimizer
+        # (ZeRO-3): batch over (data, model); params sharded dim0 over both
+        # axes; per-layer all-gather on use, reduce-scatter on grads — the
+        # right scheme for ≤30B dense training (EXPERIMENTS.md §Perf cell A)
+        return [
+            (r"(norm|_norm|lam|A_log|/D$|dt_bias|conv_[wb]|b[qkv]$)", P()),
+            (r".*", P(("data", "model"))),
+        ]
+    d = "data" if fsdp else None  # FSDP shards the non-TP dim over data
+    expert_mode = cfg.moe_shard_mode == "expert"
+    return [
+        # embeddings
+        (r"embed/tok$", P("model", d)),
+        (r"embed/head$", P(d, "model")),
+        # attention
+        (r"attn/wq$", P(d, "model")),
+        (r"attn/wk$", P(d, "model")),
+        (r"attn/wv$", P(d, "model")),
+        (r"attn/wo$", P("model", d)),
+        (r"attn/b[qkv]$", P("model")),
+        # dense mlp + shared experts
+        (r"(mlp|shared)/w_(up|gate)$", P(d, "model")),
+        (r"(mlp|shared)/w_down$", P("model", d)),
+        # MoE experts: EP over model (deepseek) or per-expert TP (grok)
+        (r"moe/router$", P()),
+        (r"moe/w_(up|gate)$", P("model", d, None) if expert_mode else P(None, d, "model")),
+        (r"moe/w_down$", P("model", d, None) if expert_mode else P(None, "model", d)),
+        # mamba-2
+        (r"ssm/w_in$", P(d, "model")),
+        (r"ssm/w_out$", P("model", d)),
+        (r"ssm/conv_[wb]$", P()),
+        (r"ssm/(A_log|D|dt_bias|norm_w)$", P()),
+        # RG-LRU
+        (r"rec/w_[xy]$", P(d, "model")),
+        (r"rec/w_[ri]$", P(None, "model")),
+        (r"rec/w_out$", P("model", d)),
+        (r"rec/(conv_[wb]|lam)$", P()),
+        # norms and anything small
+        (r"(norm|_norm)", P()),
+        (r".*", P()),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh | None) -> P:
+    """jit argument shardings must tile evenly: drop (replicate) any axis
+    whose size doesn't divide the dim (e.g. mamba2's vocab 50280 on a 16-way
+    model axis — noted as replication waste in the dry-run record)."""
+    if mesh is None:
+        return spec
+    sizes = dict(mesh.shape)  # works for Mesh and AbstractMesh
+    out = []
+    for i, entry in enumerate(tuple(spec)):
+        if entry is None or i >= len(shape):
+            out.append(None if i >= len(shape) else entry)
+            continue
+        axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+        total = 1
+        for a in axes:
+            total *= sizes.get(a, 1)
+        out.append(entry if total and shape[i] % total == 0 else None)
+    return P(*out)
+
+
+def param_specs(params_or_shapes, cfg: ModelConfig, fsdp: bool = False, mesh: Mesh | None = None):
+    """PartitionSpec pytree matching the param tree (works on
+    ShapeDtypeStructs for the dry-run)."""
+    rules = _rules(cfg, fsdp)
+
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        # scan-stacked unit params carry a leading n_units dim; optimizer
+        # state mirrors the tree under m/... v/... s/... prefixes
+        stacked = "units/" in s
+        for pat, spec in rules:
+            if re.search(pat, s):
+                spec = _trim_to_rank(spec, leaf, stacked)
+                return sanitize_spec(spec, leaf.shape, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_or_shapes)
+
+
+def _trim_to_rank(spec: P, leaf, stacked: bool) -> P:
+    ndim = len(leaf.shape)
+    tup = tuple(spec)
+    if stacked:
+        tup = (None,) + tup  # leading n_units dim
+    tup = tup[:ndim]
+    tup = tup + (None,) * (ndim - len(tup))
+    return P(*tup)
+
+
+def batch_specs(batch, *, seq_parallel: bool = False, mesh: Mesh | None = None,
+                axes: tuple = BATCH_AXES):
+    """Input sharding: batch over ``axes``; optional sequence-parallel."""
+
+    def spec_for(path, leaf):
+        ndim = len(leaf.shape)
+        name = _path_str(path)
+        if ndim == 0:
+            return P()
+        if name.endswith("position"):
+            return P()
+        if seq_parallel and ndim >= 2:
+            # batch on (pod, data); sequence on the model axis
+            spec = P(axes, "model", *([None] * (ndim - 2)))
+        else:
+            spec = P(axes, *([None] * (ndim - 1)))
+        return sanitize_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+def cache_specs(caches, cfg: ModelConfig, mesh: Mesh | None = None):
+    """KV/state cache sharding: batch over (pod, data); kv-heads/feature dims
+    over model where they exist."""
+
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        ndim = len(leaf.shape)
+        stacked = "units" in s
+        off = 1 if stacked else 0
+        if s.endswith("/pos"):
+            return P(*([None] * ndim))
+        if s.endswith(("/k", "/v", "/k_scale", "/v_scale")):
+            # [*, B, S, K, hd] (scales: [*, B, S, K])
+            tup = [None] * ndim
+            tup[off] = BATCH_AXES
+            if cfg.shard_mode == "dp_sp":
+                tup[off + 1] = "model"  # cache sequence-sharded
+            else:
+                tup[off + 2] = "model"  # cache kv-head-sharded
+            return P(*tup)
+        if s.endswith("/conv"):
+            # [*, B, W-1, C]: batch only (C is a z/B/C concat; keep replicated)
+            tup = [None] * ndim
+            tup[off] = BATCH_AXES
+            return P(*tup)
+        if s.endswith("/h"):
+            # ssm [*, B, nh, hp, ds] / rec [*, B, w]: shard heads/width on model
+            tup = [None] * ndim
+            tup[off] = BATCH_AXES
+            if ndim - off >= 2:
+                tup[off + 1] = "model"
+            return P(*tup)
+        return P(*([None] * ndim))
+
+    def spec_sanitized(path, leaf):
+        return sanitize_spec(spec_for(path, leaf), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_sanitized, caches)
+
+
+def filter_spec(spec: P, mesh: Mesh) -> P:
+    """Drop axis names the mesh doesn't have (e.g. 'pod' on a single-pod
+    mesh) so one rule set serves every mesh."""
+    names = set(mesh.axis_names)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(keep(e) for e in tuple(spec)))
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, filter_spec(s, mesh)), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

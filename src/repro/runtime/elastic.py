@@ -1,0 +1,69 @@
+"""Elastic re-scaling: restore a checkpoint onto a different mesh.
+
+Checkpoints store full (unsharded) arrays (checkpoint/store.py), so scaling
+from e.g. a 2-pod (2,16,16) mesh down to one pod (16,16) — or up — is a
+restore with the *new* mesh's NamedShardings.  The data stream is stateless
+in (seed, step) (data/pipeline.py), so the token stream continues exactly.
+What changes on re-scale is captured in a RescalePlan for the operator log.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint import store
+from repro.configs.base import ModelConfig
+from repro.parallel import sharding
+
+
+@dataclasses.dataclass
+class RescalePlan:
+    old_shape: tuple
+    new_shape: tuple
+    per_device_batch_old: float
+    per_device_batch_new: float
+    notes: list[str]
+
+
+def plan_rescale(old_mesh_shape: dict, new_mesh_shape: dict, global_batch: int) -> RescalePlan:
+    old_n = 1
+    for v in old_mesh_shape.values():
+        old_n *= v
+    new_n = 1
+    for v in new_mesh_shape.values():
+        new_n *= v
+    notes = []
+    old_dp = old_mesh_shape.get("pod", 1) * old_mesh_shape.get("data", 1)
+    new_dp = new_mesh_shape.get("pod", 1) * new_mesh_shape.get("data", 1)
+    if global_batch % new_dp:
+        notes.append(
+            f"global_batch {global_batch} not divisible by new DP degree {new_dp}: "
+            "GSPMD pads the batch dim"
+        )
+    if new_n < old_n:
+        notes.append("scale-down: verify per-device memory with dryrun before resuming")
+    return RescalePlan(
+        old_shape=tuple(old_mesh_shape.items()),
+        new_shape=tuple(new_mesh_shape.items()),
+        per_device_batch_old=global_batch / old_dp,
+        per_device_batch_new=global_batch / new_dp,
+        notes=notes,
+    )
+
+
+def restore_onto_mesh(
+    directory: str,
+    step: int,
+    like_tree,
+    mesh: Mesh,
+    cfg: ModelConfig,
+    fsdp: bool = False,
+):
+    """Restore a checkpoint onto ``mesh`` regardless of the mesh it was
+    saved from."""
+    specs = sharding.param_specs(like_tree, cfg, fsdp=fsdp)
+    named = sharding.to_named(specs, mesh)
+    return store.restore(directory, step, like_tree, shardings=named)

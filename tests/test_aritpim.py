@@ -1,0 +1,200 @@
+"""Bit-serial arithmetic: exhaustive small-N, property tests vs IEEE-754,
+gate-count fidelity to the paper, crossbar column budget."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aritpim, bitplanes, simulate
+from repro.core.machine import PlaneVM, compress_schedule, execute_schedule
+
+np.seterr(all="ignore")
+
+
+# ------------------------------------------------------------ gate netlists
+
+def test_full_adder_exhaustive():
+    vm = PlaneVM(mode="execute", n_words=1)
+    for a, b, c in itertools.product([0, 1], repeat=3):
+        mk = lambda v: jnp.asarray([0xFFFFFFFF if v else 0], jnp.uint32)
+        s, co = vm.full_adder(mk(a), mk(b), mk(c))
+        assert (int(s[0]) & 1) == (a ^ b ^ c)
+        assert (int(co[0]) & 1) == int(a + b + c >= 2)
+
+
+def test_fixed_add_gate_count_matches_paper():
+    # paper §3: 9 gates per bit, N=32 → 288
+    assert aritpim.count_gates(aritpim.fixed_add, 32, 32) == 288
+
+
+def test_fixed_mul_gate_count_near_paper():
+    g = aritpim.count_gates(aritpim.fixed_mul_unsigned, 32, 32)
+    assert abs(g - 10 * 32 * 32) / (10 * 32 * 32) < 0.15  # ≈10N² (paper §3)
+
+
+def test_schedules_fit_crossbar_columns():
+    # operands + intermediates must fit the paper's 1024-column crossbar
+    for op in ("fixed_add", "float_add", "float_mul"):
+        s = aritpim.build_schedule(op, compress=True)
+        assert s.num_cols <= 1024, (op, s.num_cols)
+
+
+def test_compressed_schedule_equivalence():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 2**32, 96, dtype=np.uint64).astype(np.uint32).view(np.float32)
+    y = rng.integers(0, 2**32, 96, dtype=np.uint64).astype(np.uint32).view(np.float32)
+    s = aritpim.build_schedule("float_add", compress=True)
+    out = execute_schedule(
+        s,
+        {"a": bitplanes.f32_to_planes(jnp.asarray(x)),
+         "b": bitplanes.f32_to_planes(jnp.asarray(y))},
+        n_words=3,
+    )
+    got = np.asarray(bitplanes.planes_to_f32(out["out"], 96))
+    exp = (x + y).astype(np.float32)
+    ok = (got.view(np.uint32) == exp.view(np.uint32)) | (np.isnan(got) & np.isnan(exp))
+    assert ok.all()
+
+
+# --------------------------------------------------------------- bit-planes
+
+@given(st.integers(1, 200), st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, n).astype(bool)
+    packed = bitplanes.pack_bits(jnp.asarray(bits))
+    assert np.array_equal(np.asarray(bitplanes.unpack_bits(packed, n)), bits)
+    assert np.array_equal(np.asarray(packed), bitplanes.np_pack_reference(bits.astype(np.uint8)))
+
+
+# ------------------------------------------------------------- fixed point
+
+def test_fixed_add_exhaustive_small():
+    xs = np.arange(-8, 8, dtype=np.int32)
+    X, Y = np.meshgrid(xs, xs)
+    X, Y = X.ravel(), Y.ravel()
+    vm = PlaneVM(mode="execute", n_words=bitplanes.num_words(len(X)))
+    S = aritpim.fixed_add(vm, bitplanes.int_to_planes(jnp.asarray(X), 4),
+                          bitplanes.int_to_planes(jnp.asarray(Y), 4))
+    got = np.asarray(bitplanes.planes_to_int(S, len(X)))
+    exp = ((X + Y) & 0xF)
+    exp = np.where(exp >= 8, exp - 16, exp)
+    assert np.array_equal(got, exp)
+
+
+def test_fixed_mul_signed_exhaustive_small():
+    xs = np.arange(-8, 8, dtype=np.int32)
+    X, Y = np.meshgrid(xs, xs)
+    X, Y = X.ravel(), Y.ravel()
+    vm = PlaneVM(mode="execute", n_words=bitplanes.num_words(len(X)))
+    P = aritpim.fixed_mul_signed(vm, bitplanes.int_to_planes(jnp.asarray(X), 4),
+                                 bitplanes.int_to_planes(jnp.asarray(Y), 4))
+    got = np.asarray(bitplanes.planes_to_int(P, len(X)))
+    exp = (X.astype(np.int64) * Y.astype(np.int64)) & 0xFF
+    exp = np.where(exp >= 128, exp - 256, exp).astype(np.int32)
+    assert np.array_equal(got, exp)
+
+
+def test_fixed_add32_random():
+    rng = np.random.default_rng(1)
+    x = rng.integers(-2**31, 2**31, 257, dtype=np.int64).astype(np.int32)
+    y = rng.integers(-2**31, 2**31, 257, dtype=np.int64).astype(np.int32)
+    got, cost = simulate.fixed_add(x, y)
+    exp = (x.astype(np.int64) + y.astype(np.int64)).astype(np.int32)
+    assert np.array_equal(np.asarray(got), exp)
+    assert cost.gates == 288 and abs(cost.compute_complexity - 3.0) < 1e-9
+
+
+# ----------------------------------------------------------- floating point
+
+N_VEC = 256
+_f32_vec = st.lists(
+    st.integers(0, 2**32 - 1), min_size=N_VEC, max_size=N_VEC
+).map(lambda xs: np.asarray(xs, np.uint64).astype(np.uint32).view(np.float32))
+
+
+def _check_f32(got, exp):
+    gb, eb = np.asarray(got).view(np.uint32), exp.view(np.uint32)
+    ok = (gb == eb) | (np.isnan(np.asarray(got)) & np.isnan(exp))
+    assert ok.all(), f"{(~ok).sum()} ULP mismatches"
+
+
+@given(_f32_vec, _f32_vec)
+@settings(max_examples=8, deadline=None)
+def test_float_add_bit_exact(x, y):
+    got, cost = simulate.float_add(x, y)
+    _check_f32(got, (x + y).astype(np.float32))
+    # deterministic netlist: execute-mode count equals the recorded one
+    assert cost.gates == aritpim.count_gates(aritpim.float_add, 32, 32)
+
+
+@given(_f32_vec, _f32_vec)
+@settings(max_examples=6, deadline=None)
+def test_float_mul_bit_exact(x, y):
+    got, _ = simulate.float_mul(x, y)
+    _check_f32(got, (x * y).astype(np.float32))
+
+
+def test_float_specials_and_subnormals():
+    specials = np.array(
+        [0.0, -0.0, np.inf, -np.inf, np.nan, 1.0, -1.0, 1e-45, -1e-45,
+         3.4e38, 1.17549435e-38, 5.877e-39], dtype=np.float32)
+    X, Y = np.meshgrid(specials, specials)
+    X, Y = X.ravel(), Y.ravel()
+    got, _ = simulate.float_add(X, Y)
+    _check_f32(got, (X + Y).astype(np.float32))
+    got, _ = simulate.float_mul(X, Y)
+    _check_f32(got, (X * Y).astype(np.float32))
+
+
+def test_float_add_cancellation_paths():
+    # massive-cancellation and near-magnitude subtraction (sticky-borrow path)
+    rng = np.random.default_rng(5)
+    a = rng.normal(size=300).astype(np.float32)
+    b = (-a * (1 + np.float32(2.0) ** rng.integers(-24, 0, 300))).astype(np.float32)
+    got, _ = simulate.float_add(a, b)
+    _check_f32(got, (a + b).astype(np.float32))
+
+
+def test_fixed_div_exhaustive_small():
+    xs = np.arange(-8, 8, dtype=np.int32)
+    ys = np.array([v for v in range(-8, 8) if v != 0], dtype=np.int32)
+    X, Y = np.meshgrid(xs, ys)
+    X, Y = X.ravel(), Y.ravel()
+    vm = PlaneVM(mode="execute", n_words=bitplanes.num_words(len(X)))
+    Q, R = aritpim.fixed_div_signed(
+        vm, bitplanes.int_to_planes(jnp.asarray(X), 4),
+        bitplanes.int_to_planes(jnp.asarray(Y), 4))
+    gq = np.asarray(bitplanes.planes_to_int(Q, len(X)))
+    gr = np.asarray(bitplanes.planes_to_int(R, len(X)))
+    eq = (np.abs(X) // np.abs(Y)) * np.sign(X) * np.sign(Y)  # C truncation
+    er = X - eq * Y
+    eq = np.where(eq == 8, -8, eq)  # -8/-1 wraps in 4 bits
+    assert np.array_equal(gq, eq.astype(np.int32))
+    assert np.array_equal(gr, er.astype(np.int32))
+
+
+@given(_f32_vec, _f32_vec)
+@settings(max_examples=4, deadline=None)
+def test_float_div_bit_exact(x, y):
+    got, _ = simulate.float_div(x, y)
+    _check_f32(got, (x / y).astype(np.float32))
+
+
+def test_float_div_specials():
+    sp = np.array([0.0, -0.0, np.inf, -np.inf, np.nan, 1.0, -1.0, 1e-45,
+                   3.4e38, 1.17549435e-38], dtype=np.float32)
+    X, Y = np.meshgrid(sp, sp)
+    got, _ = simulate.float_div(X.ravel(), Y.ravel())
+    _check_f32(got, (X.ravel() / Y.ravel()).astype(np.float32))
+
+
+def test_div_schedules_fit_crossbar():
+    for op in ("fixed_div", "float_div"):
+        s = aritpim.build_schedule(op, compress=True)
+        assert s.num_cols <= 1024, (op, s.num_cols)
