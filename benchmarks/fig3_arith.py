@@ -1,22 +1,24 @@
-"""Paper Fig 3: throughput + energy efficiency of vectored 32-bit arithmetic.
+"""Paper Fig 3: throughput + energy efficiency of vectored arithmetic.
 
-Columns per op: our netlist gates, paper-calibrated gates, modeled PIM
-throughput (memristive/DRAM, ours + paper), GPU measured/theoretical from the
-paper, and the TPU v5e memory-bound/compute-bound equivalents.  The
-us_per_call column times the bit-exact simulation (execute-mode PlaneVM on
-CPU) for a 4096-element vector — correctness wall-time, not the modeled
-hardware number.
+Columns per op: our recorded netlist gates, the post-pipeline optimized gate
+count and peak live columns from the ``repro.core.ir`` compiler (one compile
+cache shared with kernels/simulate/analyzer), paper-calibrated gates, modeled
+PIM throughput (memristive/DRAM, ours + paper), GPU measured/theoretical from
+the paper, and the TPU v5e memory-bound/compute-bound equivalents.  Beyond
+the paper's 32-bit set, the multi-precision rows (int8/int16 fixed, bf16
+float) quantify the paper's bit-serial scaling argument: gates fall
+superlinearly with precision.
+
+The us_per_call column times the bit-exact simulation (execute-mode PlaneVM
+on CPU) — correctness wall-time, not the modeled hardware number.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aritpim, simulate
+from repro.core import ir, simulate
 from repro.core.costmodel import (
     A6000,
     DRAM_PIM,
@@ -31,47 +33,62 @@ from .common import time_fn
 
 N_ELEMS = 4096
 
-_SIM = {
-    "fixed32_add": lambda x, y: simulate.fixed_add(x, y)[0],
-    "fixed32_mul": lambda x, y: simulate.fixed_mul(x, y)[0],
-    "float32_add": lambda x, y: simulate.float_add(x, y)[0],
-    "float32_mul": lambda x, y: simulate.float_mul(x, y)[0],
-    "float32_div": lambda x, y: simulate.float_div(x, y)[0],
+# name -> (sim fn, ir op key, nbits, input kind)
+_OPS = {
+    "fixed8_add": (lambda x, y: simulate.fixed_add(x, y, nbits=8)[0], "fixed_add", 8, "int8"),
+    "fixed8_mul": (lambda x, y: simulate.fixed_mul(x, y, nbits=8)[0], "fixed_mul", 8, "int8"),
+    "fixed16_add": (lambda x, y: simulate.fixed_add(x, y, nbits=16)[0], "fixed_add", 16, "int16"),
+    "fixed16_mul": (lambda x, y: simulate.fixed_mul(x, y, nbits=16)[0], "fixed_mul", 16, "int16"),
+    "fixed32_add": (lambda x, y: simulate.fixed_add(x, y)[0], "fixed_add", 32, "int32"),
+    "fixed32_mul": (lambda x, y: simulate.fixed_mul(x, y)[0], "fixed_mul", 32, "int32"),
+    "bf16_add": (lambda x, y: simulate.bf16_add(x, y)[0], "bf16_add", 16, "bf16"),
+    "bf16_mul": (lambda x, y: simulate.bf16_mul(x, y)[0], "bf16_mul", 16, "bf16"),
+    "float32_add": (lambda x, y: simulate.float_add(x, y)[0], "float_add", 32, "f32"),
+    "float32_mul": (lambda x, y: simulate.float_mul(x, y)[0], "float_mul", 32, "f32"),
+    "float32_div": (lambda x, y: simulate.float_div(x, y)[0], "float_div", 32, "f32"),
 }
 
-_OUR_GATES = {
-    "fixed32_add": lambda: aritpim.count_gates(aritpim.fixed_add, 32, 32),
-    "fixed32_mul": lambda: aritpim.count_gates(aritpim.fixed_mul_signed, 32, 32),
-    "float32_add": lambda: aritpim.count_gates(aritpim.float_add, 32, 32),
-    "float32_mul": lambda: aritpim.count_gates(aritpim.float_mul, 32, 32),
-    "float32_div": lambda: aritpim.count_gates(aritpim.float_div, 32, 32),
-}
+
+def _inputs(kind: str, rng: np.random.Generator):
+    if kind.startswith("int"):
+        nbits = int(kind[3:])
+        lo, hi = -(2 ** (nbits - 1)), 2 ** (nbits - 1)
+        x = rng.integers(lo, hi, N_ELEMS, dtype=np.int64).astype(np.int32)
+        y = rng.integers(lo, hi, N_ELEMS, dtype=np.int64).astype(np.int32)
+        return jnp.asarray(x), jnp.asarray(y)
+    x = rng.standard_normal(N_ELEMS).astype(np.float32)
+    y = rng.standard_normal(N_ELEMS).astype(np.float32)
+    if kind == "bf16":
+        return jnp.asarray(x, jnp.bfloat16), jnp.asarray(y, jnp.bfloat16)
+    return jnp.asarray(x), jnp.asarray(y)
 
 
 def run() -> list[dict]:
     rng = np.random.default_rng(0)
     rows = []
-    for op, sim in _SIM.items():
-        if "fixed" in op:
-            x = rng.integers(-2**31, 2**31, N_ELEMS, dtype=np.int64).astype(np.int32)
-            y = rng.integers(-2**31, 2**31, N_ELEMS, dtype=np.int64).astype(np.int32)
-        else:
-            x = rng.standard_normal(N_ELEMS).astype(np.float32)
-            y = rng.standard_normal(N_ELEMS).astype(np.float32)
+    for op, (sim, ir_key, nbits, kind) in _OPS.items():
+        x, y = _inputs(kind, rng)
+        rep = ir.op_cost(ir_key, nbits)  # warm the compile cache before timing
         # eager bit-exact simulation: the 12k–24k-op unrolled mul/div
         # netlists exceed an XLA-CPU MLIR pipeline limit under jit; the
         # column is correctness wall-time, not modeled hardware time
-        us = time_fn(sim, jnp.asarray(x), jnp.asarray(y), warmup=0, iters=1)
-        ours = _OUR_GATES[op]()
-        paper = PAPER_GATE_COUNTS.get(op, ours)  # div: no Fig-3 reference point
-        bytes_per_op = 12  # 2×4B read + 4B write
+        us = time_fn(sim, x, y, warmup=0, iters=1)
+        ours = rep.recorded_gates
+        paper = PAPER_GATE_COUNTS.get(op)  # None for ops with no Fig-3 reference
+        bytes_per_op = 3 * (nbits // 8)  # 2 reads + 1 write
         rows.append({
             "name": f"fig3/{op}",
             "us_per_call": f"{us:.0f}",
-            "gates_ours": ours,
-            "gates_paper": paper,
+            "gates_recorded": ours,
+            "gates_optimized": rep.gates,  # post-pipeline (≤ recorded)
+            "cols_peak": rep.num_cols,  # ≤ the 1024-column crossbar budget
+            "gates_paper": paper if paper is not None else "n/a",
             "memristive_tops_ours": f"{MEMRISTIVE_PIM.op_throughput(ours)/1e12:.2f}",
-            "memristive_tops_paper_model": f"{MEMRISTIVE_PIM.op_throughput(paper)/1e12:.2f}",
+            "memristive_tops_optimized": f"{MEMRISTIVE_PIM.op_throughput(rep.gates)/1e12:.2f}",
+            "memristive_tops_paper_model": (
+                f"{MEMRISTIVE_PIM.op_throughput(paper)/1e12:.2f}"
+                if paper is not None else "n/a"
+            ),
             "memristive_tops_paper_fig3": (
                 f"{PAPER_PIM_THROUGHPUT[('memristive', op)]/1e12:.2f}"
                 if ('memristive', op) in PAPER_PIM_THROUGHPUT else "n/a"

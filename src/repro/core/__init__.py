@@ -2,8 +2,9 @@
 bit-serial arithmetic, analytical cost model, CC/reuse metrics, roofline
 extraction, and the Fig-8 offload analyzer."""
 
-from . import analyzer, aritpim, bitplanes, costmodel, machine, metrics, roofline, simulate
+from . import analyzer, aritpim, bitplanes, costmodel, ir, machine, metrics, roofline, simulate
 from .analyzer import OffloadVerdict, Workload, analyze
+from .ir import CompiledSchedule, ScheduleIR, compile_op, get_backend, register_backend
 from .costmodel import (
     A100,
     A6000,
@@ -20,8 +21,9 @@ from .machine import PlaneVM, Schedule, execute_schedule
 from .roofline import RooflineReport, build_report, parse_collectives
 
 __all__ = [
-    "analyzer", "aritpim", "bitplanes", "costmodel", "machine", "metrics",
+    "analyzer", "aritpim", "bitplanes", "costmodel", "ir", "machine", "metrics",
     "roofline", "simulate", "OffloadVerdict", "Workload", "analyze",
+    "CompiledSchedule", "ScheduleIR", "compile_op", "get_backend", "register_backend",
     "A100", "A6000", "DRAM_PIM", "MEMRISTIVE_PIM", "PAPER_GATE_COUNTS",
     "PAPER_PIM_THROUGHPUT", "TPU_V5E", "GPUConfig", "PIMConfig", "TPUConfig",
     "PlaneVM", "Schedule", "execute_schedule", "RooflineReport",

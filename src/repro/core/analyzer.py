@@ -37,6 +37,19 @@ class Workload:
         return self.flops / self.hbm_bytes if self.hbm_bytes else float("inf")
 
 
+def netlist_gate_counts(nbits: int = 32) -> dict[str, int]:
+    """Our own netlists' recorded gate counts, keyed like PAPER_GATE_COUNTS.
+
+    Pulled from the ``repro.core.ir`` compile cache (the cost backend), so
+    the analyzer, ``simulate`` and the benchmarks all report from the same
+    compilation path — pass the result as ``gate_counts=`` to ``analyze`` /
+    ``pim_time`` to model our netlists instead of the paper-calibrated ones.
+    """
+    from . import ir
+
+    return ir.netlist_gate_counts(nbits)
+
+
 @dataclasses.dataclass(frozen=True)
 class OffloadVerdict:
     workload: str

@@ -20,6 +20,7 @@ got wrong and AritPIM fixed (paper §1, §3).
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Sequence
 
 from .machine import PlaneVM
@@ -328,13 +329,35 @@ def float_div(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
 
 
 # --------------------------------------------------------------------------
-# IEEE-754 binary32 (paper §3, AritPIM [3])
+# IEEE-754 binary floating point, format-parameterized (paper §3, AritPIM [3])
 # --------------------------------------------------------------------------
 
-def _unpack_f32(vm: PlaneVM, X: Sequence[Plane]):
-    m = list(X[0:23])
-    e = list(X[23:31])
-    s = X[31]
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """IEEE-754-style binary format: LSB-first layout [mantissa | exp | sign]."""
+
+    e_bits: int
+    m_bits: int
+
+    @property
+    def width(self) -> int:
+        return 1 + self.e_bits + self.m_bits
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.e_bits - 1)) - 1
+
+
+FLOAT32 = FloatFormat(e_bits=8, m_bits=23)
+BFLOAT16 = FloatFormat(e_bits=8, m_bits=7)
+
+
+def _unpack_float(vm: PlaneVM, X: Sequence[Plane], fmt: FloatFormat):
+    mb, eb = fmt.m_bits, fmt.e_bits
+    m = list(X[0:mb])
+    e = list(X[mb:mb + eb])
+    s = X[mb + eb]
     hidden = vm.or_tree(e)  # e != 0
     exp_all1 = and_tree(vm, e)
     m_nonzero = vm.or_tree(m)
@@ -343,37 +366,50 @@ def _unpack_f32(vm: PlaneVM, X: Sequence[Plane]):
     is_zero = vm.and_(vm.not_(hidden), vm.not_(m_nonzero))
     # effective exponent: subnormals live at scale e=1
     e_eff = [vm.or_(e[0], vm.not_(hidden))] + e[1:]
-    M = m + [hidden]  # 24-bit significand with hidden bit
+    M = m + [hidden]  # (m_bits+1)-bit significand with hidden bit
     return dict(s=s, e=e, m=m, e_eff=e_eff, M=M, hidden=hidden,
                 nan=is_nan, inf=is_inf, zero=is_zero)
 
 
-def _qnan_planes(vm: PlaneVM):
+def _qnan_planes(vm: PlaneVM, fmt: FloatFormat = FLOAT32):
     one, zero = vm.const1(), vm.const0()
-    m = [zero] * 22 + [one]  # quiet bit
-    e = [one] * 8
+    m = [zero] * (fmt.m_bits - 1) + [one]  # quiet bit
+    e = [one] * fmt.e_bits
     return m + e + [zero]
 
 
-def _inf_planes(vm: PlaneVM, sign: Plane):
+def _inf_planes(vm: PlaneVM, sign: Plane, fmt: FloatFormat = FLOAT32):
     one, zero = vm.const1(), vm.const0()
-    return [zero] * 23 + [one] * 8 + [sign]
+    return [zero] * fmt.m_bits + [one] * fmt.e_bits + [sign]
 
 
-def _pack_f32(vm: PlaneVM, s: Plane, e: Sequence[Plane], m: Sequence[Plane]):
-    assert len(e) == 8 and len(m) == 23
+def _pack_float(vm: PlaneVM, s: Plane, e: Sequence[Plane], m: Sequence[Plane],
+                fmt: FloatFormat):
+    assert len(e) == fmt.e_bits and len(m) == fmt.m_bits
     return list(m) + list(e) + [s]
 
 
-def float_add(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
-    """IEEE-754 binary32 addition, RNE, subnormals, ±0, Inf/NaN."""
-    a = _unpack_f32(vm, A)
-    b = _unpack_f32(vm, B)
+def _unpack_f32(vm: PlaneVM, X: Sequence[Plane]):
+    return _unpack_float(vm, X, FLOAT32)
+
+
+def _pack_f32(vm: PlaneVM, s: Plane, e: Sequence[Plane], m: Sequence[Plane]):
+    return _pack_float(vm, s, e, m, FLOAT32)
+
+
+def float_add_fmt(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane],
+                  fmt: FloatFormat = FLOAT32):
+    """IEEE-754 addition for any (e_bits, m_bits) format: RNE, subnormals,
+    ±0, Inf/NaN.  float32 and bfloat16 are instantiations of this netlist."""
+    mb, eb = fmt.m_bits, fmt.e_bits
+    reg = mb + 4  # [s, r, g | M] with the hidden bit on top
+    a = _unpack_float(vm, A, fmt)
+    b = _unpack_float(vm, B, fmt)
     eff_sub = vm.xor(a["s"], b["s"])
 
-    # --- magnitude compare on (e, m) as a 31-bit integer, swap to L >= S
-    magA = list(A[0:31])
-    magB = list(B[0:31])
+    # --- magnitude compare on (e, m) as a (width-1)-bit integer, swap to L >= S
+    magA = list(A[0:mb + eb])
+    magB = list(B[0:mb + eb])
     lt = unsigned_lt(vm, magA, magB)  # |A| < |B|
     e_l = mux_planes(vm, lt, b["e_eff"], a["e_eff"])
     e_s = mux_planes(vm, lt, a["e_eff"], b["e_eff"])
@@ -381,23 +417,25 @@ def float_add(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
     M_s = mux_planes(vm, lt, a["M"], b["M"])
     s_l = vm.mux(lt, b["s"], a["s"])
 
-    # --- align smaller significand: registers are 27 bits = [s, r, g | M<<3]
+    # --- align smaller significand: registers are reg bits = [s, r, g | M<<3]
     d, _ = ripple_sub(vm, e_l, e_s)  # e_l >= e_s by the swap
     Sreg = zero_planes(vm, 3) + M_s
     sticky = vm.const0()
-    # d is 8-bit; shifts >= 27 empty the register — 5 stages + two top stages
-    Sreg, sticky = shift_right_var(vm, Sreg, d[:6], sticky)
-    top_big = vm.or_(d[6], d[7])  # d >= 64: all out
-    lost_all = vm.or_tree(Sreg)
-    sticky = vm.or_(sticky, vm.and_(top_big, lost_all))
-    Sreg = mux_planes(vm, top_big, zero_planes(vm, 27), Sreg)
+    # low shift stages cover 0..2^klow-1 >= reg-1; higher d bits empty the reg
+    klow = max(1, (reg - 1).bit_length())
+    Sreg, sticky = shift_right_var(vm, Sreg, d[:klow], sticky)
+    if klow < eb:
+        top_big = vm.or_tree(d[klow:])  # d >= 2^klow: all out
+        lost_all = vm.or_tree(Sreg)
+        sticky = vm.or_(sticky, vm.and_(top_big, lost_all))
+        Sreg = mux_planes(vm, top_big, zero_planes(vm, reg), Sreg)
 
     # --- add/sub
     Lreg = zero_planes(vm, 3) + M_l
     Bx = [vm.xor(x, eff_sub) for x in Sreg]
     R, cout = ripple_add(vm, Lreg, Bx, cin=eff_sub)
-    top = vm.and_(vm.not_(eff_sub), cout)  # bit 27 (add overflow)
-    V = R + [top]  # 28 bits
+    top = vm.and_(vm.not_(eff_sub), cout)  # bit reg (add overflow)
+    V = R + [top]  # reg+1 bits
     # Effective subtraction with shifted-out bits: the true result lies in
     # (V-1, V) at bottom-bit scale — the sticky acts as a *borrow* here
     # (classic FP-adder correction; without it results are 1 ULP high).
@@ -406,16 +444,16 @@ def float_add(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
 
     # --- normalize: conditional right-1 (top set), then clamped left shift
     cond = top
-    W = [vm.mux(cond, V[i + 1], V[i]) for i in range(27)]
+    W = [vm.mux(cond, V[i + 1], V[i]) for i in range(reg)]
     sticky = vm.or_(sticky, vm.and_(cond, V[0]))
-    e_base, _ = ripple_inc(vm, e_l + [vm.const0()], cond)  # 9-bit
-    lz, all_zero = leading_zero_count(vm, W)  # 5-bit (n=27)
-    lz9 = extend(vm, lz, 9)
-    e_m1, _ = ripple_sub(vm, e_base, const_planes(vm, 1, 9))
-    lz_small = unsigned_lt(vm, lz9, e_m1)
+    e_base, _ = ripple_inc(vm, e_l + [vm.const0()], cond)  # eb+1 bits
+    lz, all_zero = leading_zero_count(vm, W)
+    lzx = extend(vm, lz, eb + 1)
+    e_m1, _ = ripple_sub(vm, e_base, const_planes(vm, 1, eb + 1))
+    lz_small = unsigned_lt(vm, lzx, e_m1)
     # shiftL = min(lz, e_base - 1)   (e_base >= 1 always)
-    shiftL = mux_planes(vm, lz_small, lz9, e_m1)
-    W = shift_left_var(vm, W, shiftL[:5])
+    shiftL = mux_planes(vm, lz_small, lzx, e_m1)
+    W = shift_left_var(vm, W, shiftL[:len(lz)])
     e_new, _ = ripple_sub(vm, e_base, shiftL)
 
     # --- round to nearest even
@@ -423,33 +461,38 @@ def float_add(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
     st = vm.or_(W[0], sticky)
     lsb = W[3]
     inc = vm.and_(g, vm.or_tree([r, st, lsb]))
-    Mr, cr = ripple_inc(vm, W[3:27], inc)
-    e_fin, _ = ripple_inc(vm, e_new, cr)  # 9-bit
-    hidden_out = vm.or_(Mr[23], cr)
-    m_out = mux_planes(vm, cr, zero_planes(vm, 23), Mr[0:23])
-    e_enc = [vm.and_(hidden_out, x) for x in e_fin[:8]]
+    Mr, cr = ripple_inc(vm, W[3:3 + mb + 1], inc)
+    e_fin, _ = ripple_inc(vm, e_new, cr)  # eb+1 bits
+    hidden_out = vm.or_(Mr[mb], cr)
+    m_out = mux_planes(vm, cr, zero_planes(vm, mb), Mr[0:mb])
+    e_enc = [vm.and_(hidden_out, x) for x in e_fin[:eb]]
 
-    # --- overflow to inf: e_fin >= 255
-    ge255 = vm.or_(e_fin[8], and_tree(vm, e_fin[:8]))
+    # --- overflow to inf: e_fin >= 2^eb - 1
+    ge_max = vm.or_(e_fin[eb], and_tree(vm, e_fin[:eb]))
 
     # --- zero result (exact cancellation): sign = s_a AND s_b (RNE)
     zero_res = all_zero
     sign_zero = vm.and_(a["s"], b["s"])
     s_res = vm.mux(zero_res, sign_zero, s_l)
-    e_enc = mux_planes(vm, zero_res, zero_planes(vm, 8), e_enc)
-    m_out = mux_planes(vm, zero_res, zero_planes(vm, 23), m_out)
+    e_enc = mux_planes(vm, zero_res, zero_planes(vm, eb), e_enc)
+    m_out = mux_planes(vm, zero_res, zero_planes(vm, mb), m_out)
 
-    normal = _pack_f32(vm, s_res, e_enc, m_out)
+    normal = _pack_float(vm, s_res, e_enc, m_out, fmt)
 
     # --- special chain: overflow → Inf, input Inf, NaN
     res_nan = vm.or_tree([a["nan"], b["nan"], vm.and_(vm.and_(a["inf"], b["inf"]), eff_sub)])
     res_inf = vm.and_(vm.or_(a["inf"], b["inf"]), vm.not_(res_nan))
     inf_sign = vm.mux(a["inf"], a["s"], b["s"])
 
-    out = mux_planes(vm, ge255, _inf_planes(vm, s_l), normal)
-    out = mux_planes(vm, res_inf, _inf_planes(vm, inf_sign), out)
-    out = mux_planes(vm, res_nan, _qnan_planes(vm), out)
+    out = mux_planes(vm, ge_max, _inf_planes(vm, s_l, fmt), normal)
+    out = mux_planes(vm, res_inf, _inf_planes(vm, inf_sign, fmt), out)
+    out = mux_planes(vm, res_nan, _qnan_planes(vm, fmt), out)
     return out
+
+
+def float_add(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
+    """IEEE-754 binary32 addition, RNE, subnormals, ±0, Inf/NaN."""
+    return float_add_fmt(vm, A, B, FLOAT32)
 
 
 def float_sub(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
@@ -457,70 +500,80 @@ def float_sub(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
     return float_add(vm, A, Bneg)
 
 
-def float_mul(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
-    """IEEE-754 binary32 multiplication, RNE, gradual underflow, Inf/NaN."""
-    a = _unpack_f32(vm, A)
-    b = _unpack_f32(vm, B)
+def bf16_add(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
+    """bfloat16 addition (same netlist as float32, narrower mantissa)."""
+    return float_add_fmt(vm, A, B, BFLOAT16)
+
+
+def float_mul_fmt(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane],
+                  fmt: FloatFormat = FLOAT32):
+    """IEEE-754 multiplication for any format: RNE, gradual underflow, Inf/NaN."""
+    mb, eb = fmt.m_bits, fmt.e_bits
+    pw = 2 * (mb + 1)  # significand product width
+    extw = eb + 3  # two's-complement exponent working width
+    a = _unpack_float(vm, A, fmt)
+    b = _unpack_float(vm, B, fmt)
     s = vm.xor(a["s"], b["s"])
 
-    # --- significand product: 24×24 → 48 bits (the dominant 10·24² gates)
-    P = fixed_mul_unsigned(vm, a["M"], b["M"])  # 48 planes
+    # --- significand product: (mb+1)×(mb+1) → pw bits (the dominant ~10N² gates)
+    P = fixed_mul_unsigned(vm, a["M"], b["M"])
 
-    # --- exponent: E = e_a_eff + e_b_eff - 127, as 11-bit two's complement
-    e_sum, c = ripple_add(vm, extend(vm, a["e_eff"], 9), extend(vm, b["e_eff"], 9))
-    E = e_sum + [c, vm.const0()]  # 11-bit, always >= 0 here
-    E, _ = ripple_sub(vm, E, const_planes(vm, 127, 11))
+    # --- exponent: E = e_a_eff + e_b_eff - bias, as extw-bit two's complement
+    e_sum, c = ripple_add(vm, extend(vm, a["e_eff"], eb + 1), extend(vm, b["e_eff"], eb + 1))
+    E = e_sum + [c, vm.const0()]  # extw bits, always >= 0 here
+    E, _ = ripple_sub(vm, E, const_planes(vm, fmt.bias, extw))
 
-    # --- normalize: leading one target position 46
-    cond47 = P[47]
-    W = [vm.mux(cond47, P[i + 1], P[i]) for i in range(47)]
-    sticky = vm.and_(cond47, P[0])
-    E, _ = ripple_inc(vm, E, cond47)
+    # --- normalize: leading one target position pw-2
+    cond_top = P[pw - 1]
+    W = [vm.mux(cond_top, P[i + 1], P[i]) for i in range(pw - 1)]
+    sticky = vm.and_(cond_top, P[0])
+    E, _ = ripple_inc(vm, E, cond_top)
 
-    lz, p_zero = leading_zero_count(vm, W)  # 6-bit (n=47)
-    lz11 = extend(vm, lz, 11)
-    e_m1, _ = ripple_sub(vm, E, const_planes(vm, 1, 11))
-    e_m1_neg = e_m1[10]
-    lz_small = unsigned_lt(vm, lz11, e_m1)  # valid when e_m1 >= 0
-    shiftL = mux_planes(vm, lz_small, lz11, e_m1)
-    shiftL = mux_planes(vm, e_m1_neg, zero_planes(vm, 11), shiftL)
-    W = shift_left_var(vm, W, shiftL[:6])
+    lz, p_zero = leading_zero_count(vm, W)
+    lzx = extend(vm, lz, extw)
+    e_m1, _ = ripple_sub(vm, E, const_planes(vm, 1, extw))
+    e_m1_neg = e_m1[extw - 1]
+    lz_small = unsigned_lt(vm, lzx, e_m1)  # valid when e_m1 >= 0
+    shiftL = mux_planes(vm, lz_small, lzx, e_m1)
+    shiftL = mux_planes(vm, e_m1_neg, zero_planes(vm, extw), shiftL)
+    W = shift_left_var(vm, W, shiftL[:len(lz)])
     E, _ = ripple_sub(vm, E, shiftL)
 
     # --- gradual underflow: if E <= 0 shift right by (1 - E), E := 1
-    one11 = const_planes(vm, 1, 11)
-    t, _ = ripple_sub(vm, one11, E)  # 1 - E
-    e_le0 = vm.not_(t[10])  # t >= 0 ⟺ E <= 1; combine with E != 1
-    E_is1 = vm.not_(vm.or_tree([vm.xor(x, y) for x, y in zip(E, one11)]))
+    one_x = const_planes(vm, 1, extw)
+    t, _ = ripple_sub(vm, one_x, E)  # 1 - E
+    e_le0 = vm.not_(t[extw - 1])  # t >= 0 ⟺ E <= 1; combine with E != 1
+    E_is1 = vm.not_(vm.or_tree([vm.xor(x, y) for x, y in zip(E, one_x)]))
     need_den = vm.and_(e_le0, vm.not_(E_is1))
-    t_clamped = mux_planes(vm, need_den, t, zero_planes(vm, 11))
-    big_t = vm.or_tree(t_clamped[6:])  # t >= 64: all bits out
+    t_clamped = mux_planes(vm, need_den, t, zero_planes(vm, extw))
+    kshift = max(1, (pw - 2).bit_length())  # stages covering 0..2^kshift-1 >= pw-2
+    big_t = vm.or_tree(t_clamped[kshift:])  # t >= 2^kshift: all bits out
     lost = vm.or_tree(W)
-    W, sticky = shift_right_var(vm, W, t_clamped[:6], sticky)
+    W, sticky = shift_right_var(vm, W, t_clamped[:kshift], sticky)
     sticky = vm.or_(sticky, vm.and_(big_t, lost))
-    W = mux_planes(vm, big_t, zero_planes(vm, 47), W)
-    E = mux_planes(vm, need_den, one11, E)
+    W = mux_planes(vm, big_t, zero_planes(vm, pw - 1), W)
+    E = mux_planes(vm, need_den, one_x, E)
 
-    # --- round to nearest even: mantissa = W[23..46], G=W[22], R=W[21], S=rest
-    g, r = W[22], W[21]
-    st = vm.or_(vm.or_tree(W[0:21]), sticky)
-    lsb = W[23]
+    # --- round to nearest even: mantissa = W[mb..pw-2], G/R below, S = rest
+    g, r = W[mb - 1], W[mb - 2]
+    st = vm.or_(vm.or_tree(W[0:mb - 2]) if mb > 2 else vm.const0(), sticky)
+    lsb = W[mb]
     inc = vm.and_(g, vm.or_tree([r, st, lsb]))
-    Mr, cr = ripple_inc(vm, W[23:47], inc)
+    Mr, cr = ripple_inc(vm, W[mb:pw - 1], inc)
     E, _ = ripple_inc(vm, E, cr)
-    hidden_out = vm.or_(Mr[23], cr)
-    m_out = mux_planes(vm, cr, zero_planes(vm, 23), Mr[0:23])
-    e_enc = [vm.and_(hidden_out, x) for x in E[:8]]
+    hidden_out = vm.or_(Mr[mb], cr)
+    m_out = mux_planes(vm, cr, zero_planes(vm, mb), Mr[0:mb])
+    e_enc = [vm.and_(hidden_out, x) for x in E[:eb]]
 
-    # overflow: E >= 255 (E >= 0 by now)
-    ge255 = vm.or_(vm.or_(E[8], vm.or_(E[9], E[10])), and_tree(vm, E[:8]))
+    # overflow: E >= 2^eb - 1 (E >= 0 by now)
+    ge_max = vm.or_(vm.or_tree(list(E[eb:extw])), and_tree(vm, E[:eb]))
 
     # exact zero significand product (either input zero)
-    zero_sig = vm.and_(p_zero, vm.not_(cond47))
-    e_enc = mux_planes(vm, zero_sig, zero_planes(vm, 8), e_enc)
-    m_out = mux_planes(vm, zero_sig, zero_planes(vm, 23), m_out)
+    zero_sig = vm.and_(p_zero, vm.not_(cond_top))
+    e_enc = mux_planes(vm, zero_sig, zero_planes(vm, eb), e_enc)
+    m_out = mux_planes(vm, zero_sig, zero_planes(vm, mb), m_out)
 
-    normal = _pack_f32(vm, s, e_enc, m_out)
+    normal = _pack_float(vm, s, e_enc, m_out, fmt)
 
     res_nan = vm.or_tree([
         a["nan"], b["nan"],
@@ -529,10 +582,20 @@ def float_mul(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
     ])
     res_inf = vm.and_(vm.or_(a["inf"], b["inf"]), vm.not_(res_nan))
 
-    out = mux_planes(vm, ge255, _inf_planes(vm, s), normal)
-    out = mux_planes(vm, res_inf, _inf_planes(vm, s), out)
-    out = mux_planes(vm, res_nan, _qnan_planes(vm), out)
+    out = mux_planes(vm, ge_max, _inf_planes(vm, s, fmt), normal)
+    out = mux_planes(vm, res_inf, _inf_planes(vm, s, fmt), out)
+    out = mux_planes(vm, res_nan, _qnan_planes(vm, fmt), out)
     return out
+
+
+def float_mul(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
+    """IEEE-754 binary32 multiplication, RNE, gradual underflow, Inf/NaN."""
+    return float_mul_fmt(vm, A, B, FLOAT32)
+
+
+def bf16_mul(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
+    """bfloat16 multiplication (same netlist as float32, narrower mantissa)."""
+    return float_mul_fmt(vm, A, B, BFLOAT16)
 
 
 # --------------------------------------------------------------------------
@@ -549,6 +612,8 @@ _OP_TABLE = {
     "float_sub": (float_sub, lambda n: (32, 32)),
     "float_mul": (float_mul, lambda n: (32, 32)),
     "float_div": (float_div, lambda n: (32, 32)),
+    "bf16_add": (bf16_add, lambda n: (16, 16)),
+    "bf16_mul": (bf16_mul, lambda n: (16, 16)),
 }
 
 
@@ -583,13 +648,10 @@ def count_gates(fn, *plane_widths: int) -> int:
 
 
 def gate_counts(nbits: int = 32) -> dict[str, int]:
-    """Gate counts for the paper's Fig 3 operation set (our netlists)."""
-    return {
-        f"fixed{nbits}_add": count_gates(fixed_add, nbits, nbits),
-        f"fixed{nbits}_sub": count_gates(fixed_sub, nbits, nbits),
-        f"fixed{nbits}_mul": count_gates(fixed_mul_signed, nbits, nbits),
-        f"fixed{nbits}_div": count_gates(lambda vm, A, B: fixed_div_signed(vm, A, B)[0], nbits, nbits),
-        "float32_add": count_gates(float_add, 32, 32),
-        "float32_mul": count_gates(float_mul, 32, 32),
-        "float32_div": count_gates(float_div, 32, 32),
-    }
+    """Gate counts for the paper's Fig 3 operation set (our netlists).
+
+    Delegates to ``ir.netlist_gate_counts`` so every caller (benchmarks,
+    analyzer, simulate) shares the one compile cache."""
+    from . import ir
+
+    return ir.netlist_gate_counts(nbits)

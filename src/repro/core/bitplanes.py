@@ -79,6 +79,25 @@ def planes_to_f32(planes: list[jnp.ndarray], n_elems: int) -> jnp.ndarray:
     return jax_bitcast_f32(acc)
 
 
+def bf16_to_planes(x) -> list[jnp.ndarray]:
+    """bfloat16 vector ``[n]`` → 16 packed planes (LSB first: mantissa, exp, sign)."""
+    import jax
+
+    x = jnp.asarray(x, jnp.bfloat16)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
+    return [pack_bits((bits >> jnp.uint32(j)) & jnp.uint32(1)) for j in range(16)]
+
+
+def planes_to_bf16(planes: list[jnp.ndarray], n_elems: int) -> jnp.ndarray:
+    import jax
+
+    assert len(planes) == 16
+    acc = jnp.zeros((n_elems,), jnp.uint32)
+    for j, p in enumerate(planes):
+        acc = acc | (unpack_bits(p, n_elems).astype(jnp.uint32) << jnp.uint32(j))
+    return jax.lax.bitcast_convert_type(acc.astype(jnp.uint16), jnp.bfloat16)
+
+
 def jax_bitcast_u32(x: jnp.ndarray) -> jnp.ndarray:
     import jax
 

@@ -1,0 +1,636 @@
+"""Schedule IR: the single compilation artifact between recording and execution.
+
+The paper's cost unit is a *serial NOR-gate schedule* (one column-parallel
+gate per cycle).  This module turns the recorded schedule into a real
+compiler pipeline (DESIGN.md §3–4):
+
+    PlaneVM record  →  ScheduleIR (SSA)  →  optimization passes  →
+    lower (liveness column allocation)  →  CompiledSchedule  →  backend
+
+``ScheduleIR`` is in SSA form: every row ``(op, a, b, out)`` defines a fresh
+value id, so passes are simple forward/backward rewrites with a substitution
+map.  ``lower`` maps values onto physical crossbar columns with linear-scan
+liveness recycling (this absorbs and retires the old
+``machine.compress_schedule``) and produces a ``CompiledSchedule`` with
+static input/output slot maps.
+
+Executor backends share one interface (``Backend.run``) and live in a
+registry: ``interpreter`` (pure-jnp scan), ``pallas`` (the TPU kernel in
+``repro.kernels.pim_bitserial``, registered lazily) and ``cost`` (analytical
+gate/cycle model — no data movement at all).  Compiled schedules are cached
+by ``(op, nbits, pass_list)`` so every consumer (``kernels.ops``,
+``core.simulate``, ``core.analyzer``, benchmarks) pulls from one path.
+
+Registering a new op = one entry in ``aritpim._OP_TABLE``; a new backend =
+one ``register_backend`` call.  See DESIGN.md §4 and README.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bitplanes import UMAX
+from .machine import (
+    CYCLES_PER_GATE_MEMRISTIVE,
+    OP_COPY,
+    OP_INIT0,
+    OP_INIT1,
+    OP_NOR,
+    Schedule,
+)
+
+# ---------------------------------------------------------------------------
+# IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ScheduleIR:
+    """SSA gate program: each row defines value ``out`` exactly once."""
+
+    ops: np.ndarray  # [G, 4] int32 (op, a, b, out)
+    num_values: int
+    inputs: dict[str, list[int]]  # name -> value ids (declaration order)
+    outputs: dict[str, list[int]]  # name -> value ids
+    meta: dict = dataclasses.field(default_factory=dict)
+    pass_log: tuple[str, ...] = ()
+
+    @property
+    def num_gates(self) -> int:
+        return int(self.ops.shape[0])
+
+    @property
+    def nor_gates(self) -> int:
+        """Rows that are NOR gates — the paper's compute-complexity unit."""
+        return int((self.ops[:, 0] == OP_NOR).sum())
+
+
+def from_schedule(schedule: Schedule) -> ScheduleIR:
+    """Lift a freshly *recorded* ``machine.Schedule`` into SSA.
+
+    Recorded schedules are SSA already (the VM allocates a fresh column per
+    gate output); column-allocated schedules are not and are rejected.
+    """
+    defined = set()
+    for cols in schedule.input_cols.values():
+        defined.update(cols)
+    for op, _a, _b, out in schedule.ops:
+        if int(out) in defined:
+            raise ValueError(
+                "schedule is not SSA (column written twice) — lift before "
+                "column allocation, not after"
+            )
+        defined.add(int(out))
+    return ScheduleIR(
+        ops=np.array(schedule.ops, dtype=np.int32).reshape(-1, 4),
+        num_values=schedule.num_cols,
+        inputs={k: list(v) for k, v in schedule.input_cols.items()},
+        outputs={k: list(v) for k, v in schedule.output_cols.items()},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pass framework
+# ---------------------------------------------------------------------------
+
+
+def _resolve(subst: dict[int, int], v: int) -> int:
+    while v in subst:
+        v = subst[v]
+    return v
+
+
+def _finish(ir: ScheduleIR, gates: list[tuple[int, int, int, int]],
+            subst: dict[int, int], name: str) -> ScheduleIR:
+    """Renumber values compactly (inputs first, then kept gates in order)."""
+    mapping: dict[int, int] = {}
+    new_inputs = {}
+    for k, cols in ir.inputs.items():
+        ids = []
+        for c in cols:
+            mapping[c] = len(mapping)
+            ids.append(mapping[c])
+        new_inputs[k] = ids
+    new_gates = []
+    for op, a, b, out in gates:
+        na = mapping[a] if op in (OP_NOR, OP_COPY) else 0
+        nb = mapping[b] if op == OP_NOR else 0
+        mapping[out] = len(mapping)
+        new_gates.append((op, na, nb, mapping[out]))
+    new_outputs = {
+        k: [mapping[_resolve(subst, v)] for v in vs] for k, vs in ir.outputs.items()
+    }
+    return ScheduleIR(
+        ops=np.asarray(new_gates, dtype=np.int32).reshape(-1, 4),
+        num_values=len(mapping),
+        inputs=new_inputs,
+        outputs=new_outputs,
+        meta=dict(ir.meta),
+        pass_log=ir.pass_log + (name,),
+    )
+
+
+def fold_constants(ir: ScheduleIR) -> ScheduleIR:
+    """INIT/constant folding: NOR with a known-1 operand is INIT0, NOR of two
+    known-0s is INIT1, NOR with a known-0 canonicalizes to NOT (helps CSE)."""
+    subst: dict[int, int] = {}
+    const: dict[int, int] = {}
+    gates: list[tuple[int, int, int, int]] = []
+    for op, a, b, out in ir.ops:
+        op, a, b, out = int(op), int(a), int(b), int(out)
+        if op == OP_INIT0:
+            const[out] = 0
+            gates.append((op, 0, 0, out))
+        elif op == OP_INIT1:
+            const[out] = 1
+            gates.append((op, 0, 0, out))
+        elif op == OP_COPY:
+            subst[out] = _resolve(subst, a)
+        else:  # OP_NOR
+            a, b = _resolve(subst, a), _resolve(subst, b)
+            ca, cb = const.get(a), const.get(b)
+            if ca == 1 or cb == 1:
+                const[out] = 0
+                gates.append((OP_INIT0, 0, 0, out))
+            elif ca == 0 and cb == 0:
+                const[out] = 1
+                gates.append((OP_INIT1, 0, 0, out))
+            elif ca == 0:
+                gates.append((OP_NOR, b, b, out))
+            elif cb == 0:
+                gates.append((OP_NOR, a, a, out))
+            else:
+                gates.append((OP_NOR, a, b, out))
+    return _finish(ir, gates, subst, "fold")
+
+
+def common_subexpr_elim(ir: ScheduleIR, window: int | None = None) -> ScheduleIR:
+    """NOR-level CSE by forward value numbering (operand order normalized).
+
+    Merging a recomputation reuses an *old* value, extending its live range —
+    which can raise the peak column count the allocator must provision.
+    ``window`` bounds how far back (in kept gates) a NOR may be reused;
+    ``None`` is unbounded.  ``compile_op`` tightens the window adaptively
+    until the schedule fits the unoptimized column budget.
+    """
+    subst: dict[int, int] = {}
+    seen: dict[tuple, tuple[int, int]] = {}  # key -> (value, kept index)
+    gates: list[tuple[int, int, int, int]] = []
+    for op, a, b, out in ir.ops:
+        op, a, b, out = int(op), int(a), int(b), int(out)
+        if op == OP_COPY:
+            subst[out] = _resolve(subst, a)
+            continue
+        if op in (OP_INIT0, OP_INIT1):
+            key = (op,)
+            a = b = 0
+        else:
+            a, b = _resolve(subst, a), _resolve(subst, b)
+            key = (OP_NOR, min(a, b), max(a, b))
+        hit = seen.get(key)
+        if hit is not None and (
+            op != OP_NOR or window is None or len(gates) - hit[1] <= window
+        ):
+            subst[out] = hit[0]
+            continue
+        seen[key] = (out, len(gates))
+        gates.append((op, a, b, out))
+    return _finish(ir, gates, subst, "cse" if window is None else f"cse@{window}")
+
+
+def fuse_copies(ir: ScheduleIR) -> ScheduleIR:
+    """COPY/NOT fusion: COPYs are propagated away and NOT(NOT(x)) folds to x
+    (the record-mode not-cache catches most, but CSE/fold expose more)."""
+    subst: dict[int, int] = {}
+    defs: dict[int, tuple[int, int, int]] = {}
+    gates: list[tuple[int, int, int, int]] = []
+    for op, a, b, out in ir.ops:
+        op, a, b, out = int(op), int(a), int(b), int(out)
+        if op == OP_COPY:
+            subst[out] = _resolve(subst, a)
+            continue
+        if op == OP_NOR:
+            a, b = _resolve(subst, a), _resolve(subst, b)
+            if a == b:
+                d = defs.get(a)
+                if d is not None and d[0] == OP_NOR and d[1] == d[2]:
+                    subst[out] = d[1]  # NOT(NOT(x)) == x
+                    continue
+            gates.append((OP_NOR, a, b, out))
+            defs[out] = (OP_NOR, a, b)
+        else:
+            gates.append((op, 0, 0, out))
+            defs[out] = (op, 0, 0)
+    return _finish(ir, gates, subst, "fuse")
+
+
+def dead_gate_elim(ir: ScheduleIR) -> ScheduleIR:
+    """Drop gates whose results can never reach an output plane."""
+    live = {v for cols in ir.outputs.values() for v in cols}
+    keep = np.zeros(ir.num_gates, dtype=bool)
+    for g in range(ir.num_gates - 1, -1, -1):
+        op, a, b, out = (int(x) for x in ir.ops[g])
+        if out in live:
+            keep[g] = True
+            if op == OP_NOR:
+                live.add(a)
+                live.add(b)
+            elif op == OP_COPY:
+                live.add(a)
+    gates = [tuple(int(x) for x in row) for row in ir.ops[keep]]
+    return _finish(ir, gates, {}, "dce")
+
+
+PASS_REGISTRY = {
+    "fold": fold_constants,
+    "cse": common_subexpr_elim,
+    "fuse": fuse_copies,
+    "dce": dead_gate_elim,
+}
+
+# fuse after cse exposes new common NORs, so cse runs again before dce.
+DEFAULT_PASSES: tuple[str, ...] = ("fold", "cse", "fuse", "cse", "dce")
+
+# Window ladder tried by compile_op until peak columns fit the unoptimized
+# budget.  With CSE disabled entirely (last rung) the remaining passes only
+# shrink live ranges, so the ladder always terminates.
+CSE_WINDOW_LADDER: tuple[int | None, ...] = (None, 500, 200, 50, -1)
+
+
+def run_passes(ir: ScheduleIR, passes: tuple[str, ...] = DEFAULT_PASSES,
+               cse_window: int | None = None) -> ScheduleIR:
+    """Run named passes in order.  ``cse_window`` overrides the reuse window
+    of every ``cse`` pass (``-1`` disables NOR merging entirely)."""
+    for name in passes:
+        if name == "cse" and cse_window is not None:
+            ir = common_subexpr_elim(ir, window=cse_window)
+        else:
+            ir = PASS_REGISTRY[name](ir)
+    return ir
+
+
+# ---------------------------------------------------------------------------
+# Lowering: liveness-based column allocation (retires machine.compress_schedule)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CompiledSchedule:
+    """Column-machine program with static I/O slot maps — what backends run.
+
+    ``num_cols`` is the linear-scan high-water mark, i.e. the peak number of
+    simultaneously live crossbar columns (operands + intermediates); the
+    paper's memristive config budgets 1024.
+    """
+
+    key: str
+    ops: np.ndarray  # [G, 4] int32, columns recycled
+    num_cols: int
+    input_cols: dict[str, list[int]]
+    output_cols: dict[str, list[int]]
+    recorded_len: int  # schedule rows as recorded (pre-pass)
+    recorded_gates: int  # recorded NOR count (the paper's cost unit)
+    pass_log: tuple[str, ...] = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def num_gates(self) -> int:
+        return int(self.ops.shape[0])
+
+    @property
+    def nor_gates(self) -> int:
+        return int((self.ops[:, 0] == OP_NOR).sum())
+
+    @property
+    def peak_live_cols(self) -> int:
+        return self.num_cols
+
+    @property
+    def input_slots(self) -> list[int]:
+        return [c for name in sorted(self.input_cols) for c in self.input_cols[name]]
+
+    @property
+    def output_slots(self) -> list[int]:
+        return [c for name in sorted(self.output_cols) for c in self.output_cols[name]]
+
+    def cycles(self, cycles_per_gate: int = CYCLES_PER_GATE_MEMRISTIVE) -> int:
+        return self.num_gates * cycles_per_gate
+
+    def as_arrays(self):
+        return (
+            jnp.asarray(self.ops[:, 0], jnp.int32),
+            jnp.asarray(self.ops[:, 1], jnp.int32),
+            jnp.asarray(self.ops[:, 2], jnp.int32),
+            jnp.asarray(self.ops[:, 3], jnp.int32),
+        )
+
+    def to_schedule(self) -> Schedule:
+        """Legacy ``machine.Schedule`` view (same ops/column maps)."""
+        return Schedule(
+            ops=self.ops,
+            num_cols=self.num_cols,
+            input_cols={k: list(v) for k, v in self.input_cols.items()},
+            output_cols={k: list(v) for k, v in self.output_cols.items()},
+        )
+
+    @classmethod
+    def from_legacy(cls, schedule: Schedule, key: str) -> "CompiledSchedule":
+        """Wrap an already-column-allocated ``machine.Schedule`` as-is (no
+        passes ran, so recorded == current counts)."""
+        ops = np.asarray(schedule.ops, np.int32).reshape(-1, 4)
+        return cls(
+            key=key,
+            ops=ops,
+            num_cols=schedule.num_cols,
+            input_cols={k: list(v) for k, v in schedule.input_cols.items()},
+            output_cols={k: list(v) for k, v in schedule.output_cols.items()},
+            recorded_len=int(ops.shape[0]),
+            recorded_gates=int((ops[:, 0] == OP_NOR).sum()),
+        )
+
+
+def lower(ir: ScheduleIR, key: str = "") -> CompiledSchedule:
+    """Linear-scan allocation of SSA values onto recycled crossbar columns.
+
+    Inputs are allocated first (slots ``0..n_in-1`` in declaration order, the
+    contract the Pallas kernel's static slot maps rely on); output values are
+    pinned after their final write.  A gate's output column is allocated
+    before its operands are freed, matching MAGIC's requirement that the
+    output column be initialized while operands still hold their values.
+    """
+    ops = ir.ops
+    n_gates = ops.shape[0]
+    last_use: dict[int, int] = {}
+    for g in range(n_gates):
+        op, a, b, _out = (int(x) for x in ops[g])
+        if op == OP_NOR:
+            last_use[a] = g
+            last_use[b] = g
+        elif op == OP_COPY:
+            last_use[a] = g
+    protected = {v for cols in ir.outputs.values() for v in cols}
+
+    mapping: dict[int, int] = {}
+    free: list[int] = []
+    next_col = 0
+
+    def alloc(v: int) -> int:
+        nonlocal next_col
+        if v in mapping:
+            return mapping[v]
+        if free:
+            slot = free.pop()
+        else:
+            slot = next_col
+            next_col += 1
+        mapping[v] = slot
+        return slot
+
+    # Inputs are allocated first, in declaration order, before any frees —
+    # capture their slots now, since non-output inputs are recycled later.
+    input_cols = {k: [alloc(c) for c in cols] for k, cols in ir.inputs.items()}
+
+    new_ops = np.zeros((n_gates, 4), dtype=np.int32)
+    for g in range(n_gates):
+        op, a, b, out = (int(x) for x in ops[g])
+        na = mapping[a] if op in (OP_NOR, OP_COPY) else 0
+        nb = mapping[b] if op == OP_NOR else 0
+        nout = alloc(out)
+        new_ops[g] = (op, na, nb, nout)
+        operands = (a, b) if op == OP_NOR else (a,) if op == OP_COPY else ()
+        for v in operands:
+            if last_use.get(v, -1) == g and v in mapping and v not in protected:
+                free.append(mapping.pop(v))
+
+    return CompiledSchedule(
+        key=key,
+        ops=new_ops,
+        num_cols=next_col,
+        input_cols=input_cols,
+        output_cols={k: [mapping[c] for c in v] for k, v in ir.outputs.items()},
+        recorded_len=int(ir.meta.get("recorded_len", n_gates)),
+        recorded_gates=int(ir.meta.get("recorded_gates", ir.nor_gates)),
+        pass_log=ir.pass_log,
+        meta=dict(ir.meta),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Compilation cache: (op, nbits, pass_list) → CompiledSchedule
+# ---------------------------------------------------------------------------
+
+_COMPILE_CACHE: dict[tuple[str, int, tuple[str, ...]], CompiledSchedule] = {}
+
+
+def record_op(op: str, nbits: int = 32) -> ScheduleIR:
+    """Record an ``aritpim._OP_TABLE`` builder into SSA IR."""
+    from . import aritpim
+    from .machine import PlaneVM
+
+    fn, widths = aritpim._OP_TABLE[op]
+    wa, wb = widths(nbits)
+    vm = PlaneVM(mode="record")
+    A = [vm.input_plane() for _ in range(wa)]
+    B = [vm.input_plane() for _ in range(wb)]
+    out = fn(vm, A, B)
+    ir = from_schedule(vm.finish_schedule({"a": A, "b": B}, {"out": out}))
+    ir.meta.update(
+        op=op, nbits=nbits, recorded_len=ir.num_gates, recorded_gates=vm.gates
+    )
+    return ir
+
+
+def compile_op(
+    op: str, nbits: int = 32, passes: tuple[str, ...] = DEFAULT_PASSES
+) -> CompiledSchedule:
+    """Record → optimize → lower, cached by ``(op, nbits, pass_list)``."""
+    passes = tuple(passes)
+    cache_key = (op, nbits, passes)
+    hit = _COMPILE_CACHE.get(cache_key)
+    if hit is not None:
+        return hit
+    recorded = record_op(op, nbits)
+    baseline_cols = lower(recorded).num_cols  # the old compress_schedule result
+    key = f"{op}/{nbits}/{'+'.join(passes) if passes else 'raw'}"
+    compiled = None
+    for window in CSE_WINDOW_LADDER if "cse" in passes else (None,):
+        optimized = run_passes(recorded, passes, cse_window=window)
+        compiled = lower(optimized, key=key)
+        if compiled.num_cols <= baseline_cols:
+            break
+    compiled.meta["baseline_cols"] = baseline_cols
+    _COMPILE_CACHE[cache_key] = compiled
+    return compiled
+
+
+# ---------------------------------------------------------------------------
+# Executor backends
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostReport:
+    """Analytical cost of one vectored schedule execution (length-independent)."""
+
+    key: str
+    gates: int  # optimized NOR count actually executed
+    recorded_gates: int  # recorded NOR count (paper's unit; passes only shrink it)
+    schedule_len: int  # optimized rows incl. INITs
+    cycles: int  # schedule_len * cycles_per_gate
+    num_cols: int  # peak live columns
+    cycles_per_gate: int = CYCLES_PER_GATE_MEMRISTIVE
+
+
+@dataclasses.dataclass
+class ExecutionResult:
+    planes: jnp.ndarray | None  # [n_outputs, W] uint32 (None for cost backend)
+    cost: CostReport
+
+
+class Backend:
+    """One executor: turns a CompiledSchedule (+ stacked input planes) into
+    output planes and/or an analytical cost report."""
+
+    name = "base"
+
+    def run(self, compiled: CompiledSchedule, planes: jnp.ndarray | None = None,
+            **opts: Any) -> ExecutionResult:
+        raise NotImplementedError
+
+    def cost(self, compiled: CompiledSchedule,
+             cycles_per_gate: int = CYCLES_PER_GATE_MEMRISTIVE) -> CostReport:
+        return CostReport(
+            key=compiled.key,
+            gates=compiled.nor_gates,
+            recorded_gates=compiled.recorded_gates,
+            schedule_len=compiled.num_gates,
+            cycles=compiled.num_gates * cycles_per_gate,
+            num_cols=compiled.num_cols,
+            cycles_per_gate=cycles_per_gate,
+        )
+
+
+class InterpreterBackend(Backend):
+    """Reference executor: jnp scan over the column machine, O(1) compile in
+    schedule length.  Planes are stacked ``[n_in, W]`` in sorted-name order."""
+
+    name = "interpreter"
+
+    def run(self, compiled, planes=None, **opts):
+        assert planes is not None, "interpreter needs input planes"
+        state = jnp.zeros((compiled.num_cols, planes.shape[1]), jnp.uint32)
+        state = state.at[jnp.asarray(compiled.input_slots)].set(
+            jnp.asarray(planes, jnp.uint32))
+        op, a, b, out = compiled.as_arrays()
+
+        def step(state, g):
+            op_g, a_g, b_g, out_g = g
+            va = state[a_g]
+            vb = state[b_g]
+            nor = ~(va | vb) & UMAX
+            res = jnp.where(op_g == OP_NOR, nor,
+                  jnp.where(op_g == OP_INIT0, jnp.zeros_like(nor),
+                  jnp.where(op_g == OP_INIT1, jnp.full_like(nor, UMAX), va)))
+            return state.at[out_g].set(res), None
+
+        state, _ = jax.lax.scan(step, state, (op, a, b, out))
+        return ExecutionResult(state[jnp.asarray(compiled.output_slots)],
+                               self.cost(compiled))
+
+
+class CostModelBackend(Backend):
+    """Analytical backend: no data movement, just the gate/cycle bookkeeping
+    that used to be duplicated across simulate.py and analyzer.py."""
+
+    name = "cost"
+
+    def run(self, compiled, planes=None,
+            cycles_per_gate: int = CYCLES_PER_GATE_MEMRISTIVE, **opts):
+        return ExecutionResult(None, self.cost(compiled, cycles_per_gate))
+
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    if name not in _BACKENDS and name == "pallas":
+        # The Pallas executor registers itself on import; kept lazy so core
+        # never hard-depends on jax.experimental.pallas.
+        import repro.kernels.pim_bitserial  # noqa: F401
+    return _BACKENDS[name]
+
+
+def backend_names() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+register_backend(InterpreterBackend())
+register_backend(CostModelBackend())
+
+
+# ---------------------------------------------------------------------------
+# Cost conveniences (consumed by simulate.py / analyzer.py / benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def op_cost(op: str, nbits: int = 32,
+            passes: tuple[str, ...] = DEFAULT_PASSES) -> CostReport:
+    return get_backend("cost").run(compile_op(op, nbits, passes)).cost
+
+
+def netlist_gate_counts(nbits: int = 32) -> dict[str, int]:
+    """Recorded NOR counts for the Fig-3 op set, keyed like PAPER_GATE_COUNTS
+    (plus the sub/div and bf16 entries the paper doesn't calibrate).
+
+    The single compilation path replacing ad-hoc re-recording: counts come
+    from the compile cache, so benchmarks/analyzer/simulate all agree.
+    """
+    def g(op: str, n: int = nbits) -> int:
+        return op_cost(op, n).recorded_gates
+
+    return {
+        f"fixed{nbits}_add": g("fixed_add"),
+        f"fixed{nbits}_sub": g("fixed_sub"),
+        f"fixed{nbits}_mul": g("fixed_mul"),
+        f"fixed{nbits}_div": g("fixed_div"),
+        "float32_add": g("float_add", 32),
+        "float32_mul": g("float_mul", 32),
+        "float32_div": g("float_div", 32),
+        "bf16_add": g("bf16_add", 16),
+        "bf16_mul": g("bf16_mul", 16),
+    }
+
+
+def execute_named(schedule: Schedule, input_planes: dict[str, list[jnp.ndarray]],
+                  n_words: int) -> dict[str, list[jnp.ndarray]]:
+    """Named-dict execution of a legacy ``machine.Schedule`` via the
+    interpreter backend (compat shim behind ``machine.execute_schedule``)."""
+    compiled = CompiledSchedule.from_legacy(schedule, key="adhoc")
+    names = sorted(compiled.input_cols)
+    stacked = []
+    for name in names:
+        planes = input_planes[name]
+        assert len(planes) == len(compiled.input_cols[name]), (
+            name, len(planes), len(compiled.input_cols[name]))
+        for p in planes:
+            p = jnp.asarray(p, jnp.uint32)
+            assert p.shape == (n_words,), (name, p.shape, n_words)
+            stacked.append(p)
+    out = get_backend("interpreter").run(compiled, jnp.stack(stacked)).planes
+    result: dict[str, list[jnp.ndarray]] = {}
+    i = 0
+    for name in sorted(compiled.output_cols):
+        k = len(compiled.output_cols[name])
+        result[name] = [out[i + j] for j in range(k)]
+        i += k
+    return result

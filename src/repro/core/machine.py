@@ -21,8 +21,10 @@ algorithm code runs in
   a bit-exact simulation (the oracle used by tests and benchmarks), while gate
   and cycle counters accumulate the analytical cost; and
 * **record** mode — planes are symbolic column ids; the VM emits a flat NOR
-  ``Schedule`` that the Pallas kernel (``repro.kernels.pim_bitserial``)
-  executes inside VMEM tiles.
+  ``Schedule``.  Recorded schedules are SSA (every gate writes a fresh
+  column) and feed the compiler pipeline in ``repro.core.ir`` — optimization
+  passes, liveness column allocation, and the executor backends (interpreter
+  / Pallas / analytical cost).  See DESIGN.md §3–4.
 """
 
 from __future__ import annotations
@@ -30,7 +32,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -221,103 +222,28 @@ class PlaneVM:
 
 
 def compress_schedule(schedule: Schedule) -> Schedule:
-    """Liveness-based column reallocation.
+    """Liveness-based column reallocation (compat wrapper over ``ir.lower``).
 
     The crossbar has a fixed column budget (1024 in the paper's memristive
     config) shared by operands, results and intermediates, so a faithful
-    schedule must recycle columns.  Linear-scan allocation over last-use
-    indices; output columns are pinned after their final write.
+    schedule must recycle columns.  The actual linear-scan allocator now
+    lives in :mod:`repro.core.ir` as the lowering stage of the compiler
+    pipeline; this wrapper lifts a recorded schedule into SSA, lowers it with
+    no optimization passes, and hands back the legacy ``Schedule`` view.
     """
-    ops = schedule.ops
-    n_gates = ops.shape[0]
-    last_use: dict[int, int] = {}
-    for g in range(n_gates):
-        op, a, b, out = ops[g]
-        if op == OP_NOR:
-            last_use[int(a)] = g
-            last_use[int(b)] = g
-    protected = set()
-    for cols in schedule.output_cols.values():
-        protected.update(cols)
-    for c in protected:
-        last_use[c] = n_gates + 1  # never freed
+    from . import ir
 
-    mapping: dict[int, int] = {}
-    free: list[int] = []
-    next_col = 0
-
-    def alloc(c: int) -> int:
-        nonlocal next_col
-        if c in mapping:
-            return mapping[c]
-        if free:
-            slot = free.pop()
-        else:
-            slot = next_col
-            next_col += 1
-        mapping[c] = slot
-        return slot
-
-    # inputs are live from the start
-    for cols in schedule.input_cols.values():
-        for c in cols:
-            alloc(c)
-
-    new_ops = np.zeros_like(ops)
-    for g in range(n_gates):
-        op, a, b, out = (int(x) for x in ops[g])
-        na = mapping.get(a, 0) if op == OP_NOR else 0
-        nb = mapping.get(b, 0) if op == OP_NOR else 0
-        nout = alloc(out)
-        new_ops[g] = (op, na, nb, nout)
-        if op == OP_NOR:
-            for c in (a, b):
-                if last_use.get(c, -1) == g and c in mapping and c not in protected:
-                    free.append(mapping.pop(c))
-
-    # Input columns were allocated first, in order, before any frees — their
-    # initial slots are 0..n_in-1 in declaration order.
-    new_inputs = {}
-    nxt = 0
-    for k, cols in schedule.input_cols.items():
-        new_inputs[k] = list(range(nxt, nxt + len(cols)))
-        nxt += len(cols)
-
-    return Schedule(
-        ops=new_ops,
-        num_cols=next_col,
-        input_cols=new_inputs,
-        output_cols={k: [mapping[c] for c in v] for k, v in schedule.output_cols.items()},
-    )
+    return ir.lower(ir.from_schedule(schedule)).to_schedule()
 
 
 def execute_schedule(schedule: Schedule, input_planes: dict[str, list[jnp.ndarray]], n_words: int):
     """Reference (pure-jnp, scan-based) executor for a recorded NOR program.
 
-    State: [num_cols, n_words] uint32.  Each step applies one column op with
-    dynamic indexing — compile time is O(1) in schedule length.
+    Named-dict compat wrapper over the ``interpreter`` backend in
+    :mod:`repro.core.ir` — state is [num_cols, n_words] uint32 and each scan
+    step applies one column op with dynamic indexing, so compile time is
+    O(1) in schedule length.
     """
-    state = jnp.zeros((schedule.num_cols, n_words), jnp.uint32)
-    for name, cols in schedule.input_cols.items():
-        planes = input_planes[name]
-        assert len(planes) == len(cols), (name, len(planes), len(cols))
-        state = state.at[jnp.asarray(cols)].set(jnp.stack(planes))
+    from . import ir
 
-    op, a, b, out = schedule.as_arrays()
-
-    def step(state, g):
-        op_g, a_g, b_g, out_g = g
-        va = state[a_g]
-        vb = state[b_g]
-        nor = ~(va | vb) & UMAX
-        res = jnp.where(op_g == OP_NOR, nor,
-              jnp.where(op_g == OP_INIT0, jnp.zeros_like(nor),
-              jnp.where(op_g == OP_INIT1, jnp.full_like(nor, UMAX), va)))
-        state = state.at[out_g].set(res)
-        return state, None
-
-    state, _ = jax.lax.scan(step, state, (op, a, b, out))
-    result = {}
-    for name, cols in schedule.output_cols.items():
-        result[name] = [state[c] for c in cols]
-    return result
+    return ir.execute_named(schedule, input_planes, n_words)

@@ -2,7 +2,9 @@
 
 These run the AritPIM plane algorithms in execute mode on packed planes and
 convert back to ordinary arrays.  Each call also reports the analytical cost
-(gate count → cycles → throughput under a PIM config; see ``costmodel``).
+— which now comes from the ``cost`` executor backend over the compiled
+Schedule IR (``repro.core.ir``), the same artifact the interpreter and
+Pallas backends execute, rather than from ad-hoc per-call gate counters.
 """
 
 from __future__ import annotations
@@ -13,22 +15,35 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import aritpim, bitplanes
+from . import aritpim, bitplanes, ir
 from .machine import PlaneVM
 
 
 @dataclasses.dataclass(frozen=True)
 class OpCost:
-    """Analytical cost of one vectored PIM op (independent of vector length)."""
+    """Analytical cost of one vectored PIM op (independent of vector length).
+
+    ``gates`` is the recorded NOR count — the paper's latency unit.
+    ``optimized_gates``/``peak_cols`` report what the compiled schedule
+    actually executes after the IR pass pipeline.
+    """
 
     name: str
-    gates: int  # serial NOR gates (= the paper's latency unit before init)
+    gates: int  # recorded serial NOR gates (= the paper's latency unit)
     io_bits: int  # input+output bits per element (CC denominator)
+    optimized_gates: int = 0  # post-pipeline NOR count (≤ gates)
+    peak_cols: int = 0  # peak live crossbar columns after allocation
 
     @property
     def compute_complexity(self) -> float:
         """Paper §3: gates per I/O bit."""
         return self.gates / self.io_bits
+
+
+def _op_cost(name: str, op_key: str, nbits: int, io_bits: int) -> OpCost:
+    rep = ir.op_cost(op_key, nbits)
+    return OpCost(name, rep.recorded_gates, io_bits,
+                  optimized_gates=rep.gates, peak_cols=rep.num_cols)
 
 
 def _run(fn, nbits_in, nbits_out, arrays, to_planes, from_planes):
@@ -37,30 +52,30 @@ def _run(fn, nbits_in, nbits_out, arrays, to_planes, from_planes):
     planes = [to_planes(a) for a in arrays]
     out = fn(vm, *planes)
     assert len(out) == nbits_out
-    return from_planes(out, n), vm.gates
+    return from_planes(out, n)
 
 
 # -------------------------------------------------------------- fixed point
 
 def fixed_add(x, y, nbits: int = 32):
     x, y = jnp.asarray(x), jnp.asarray(y)
-    res, gates = _run(
+    res = _run(
         aritpim.fixed_add, nbits, nbits, (x, y),
         functools.partial(bitplanes.int_to_planes, nbits=nbits),
         lambda p, n: bitplanes.planes_to_int(p, n, signed=True),
     )
-    return res, OpCost(f"fixed{nbits}_add", gates, 3 * nbits)
+    return res, _op_cost(f"fixed{nbits}_add", "fixed_add", nbits, 3 * nbits)
 
 
 def fixed_mul(x, y, nbits: int = 32):
     x, y = jnp.asarray(x), jnp.asarray(y)
-    res, gates = _run(
+    res = _run(
         aritpim.fixed_mul_signed, nbits, 2 * nbits, (x, y),
         functools.partial(bitplanes.int_to_planes, nbits=nbits),
         lambda p, n: bitplanes.planes_to_int(p[:32], n, signed=True) if nbits * 2 >= 32
         else bitplanes.planes_to_int(p, n, signed=True),
     )
-    return res, OpCost(f"fixed{nbits}_mul", gates, 4 * nbits)
+    return res, _op_cost(f"fixed{nbits}_mul", "fixed_mul", nbits, 4 * nbits)
 
 
 def fixed_mul_full(x, y, nbits: int = 32):
@@ -73,7 +88,7 @@ def fixed_mul_full(x, y, nbits: int = 32):
     P = aritpim.fixed_mul_signed(vm, A, B)
     lo = bitplanes.planes_to_int(P[:nbits], n, signed=False)
     hi = bitplanes.planes_to_int(P[nbits:], n, signed=False)
-    return (lo, hi), OpCost(f"fixed{nbits}_mul", vm.gates, 4 * nbits)
+    return (lo, hi), _op_cost(f"fixed{nbits}_mul", "fixed_mul", nbits, 4 * nbits)
 
 
 # ------------------------------------------------------------ floating point
@@ -81,52 +96,72 @@ def fixed_mul_full(x, y, nbits: int = 32):
 def float_add(x, y):
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
-    res, gates = _run(
+    res = _run(
         aritpim.float_add, 32, 32, (x, y),
         bitplanes.f32_to_planes, bitplanes.planes_to_f32,
     )
-    return res, OpCost("float32_add", gates, 3 * 32)
+    return res, _op_cost("float32_add", "float_add", 32, 3 * 32)
 
 
 def float_sub(x, y):
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
-    res, gates = _run(
+    res = _run(
         aritpim.float_sub, 32, 32, (x, y),
         bitplanes.f32_to_planes, bitplanes.planes_to_f32,
     )
-    return res, OpCost("float32_sub", gates, 3 * 32)
+    return res, _op_cost("float32_sub", "float_sub", 32, 3 * 32)
 
 
 def float_mul(x, y):
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
-    res, gates = _run(
+    res = _run(
         aritpim.float_mul, 32, 32, (x, y),
         bitplanes.f32_to_planes, bitplanes.planes_to_f32,
     )
-    return res, OpCost("float32_mul", gates, 3 * 32)
+    return res, _op_cost("float32_mul", "float_mul", 32, 3 * 32)
+
+
+def bf16_add(x, y):
+    x = jnp.asarray(x, jnp.bfloat16)
+    y = jnp.asarray(y, jnp.bfloat16)
+    res = _run(
+        aritpim.bf16_add, 16, 16, (x, y),
+        bitplanes.bf16_to_planes, bitplanes.planes_to_bf16,
+    )
+    return res, _op_cost("bf16_add", "bf16_add", 16, 3 * 16)
+
+
+def bf16_mul(x, y):
+    x = jnp.asarray(x, jnp.bfloat16)
+    y = jnp.asarray(y, jnp.bfloat16)
+    res = _run(
+        aritpim.bf16_mul, 16, 16, (x, y),
+        bitplanes.bf16_to_planes, bitplanes.planes_to_bf16,
+    )
+    return res, _op_cost("bf16_mul", "bf16_mul", 16, 3 * 16)
 
 
 def fixed_div(x, y, nbits: int = 32):
     """Signed division (C truncation semantics); x//0 → implementation-defined."""
     x, y = jnp.asarray(x), jnp.asarray(y)
-    res, gates = _run(
+    res = _run(
         lambda vm, A, B: aritpim.fixed_div_signed(vm, A, B)[0], nbits, nbits, (x, y),
         functools.partial(bitplanes.int_to_planes, nbits=nbits),
         lambda p, n: bitplanes.planes_to_int(p, n, signed=True),
     )
-    return res, OpCost(f"fixed{nbits}_div", gates, 3 * nbits)
+    return res, _op_cost(f"fixed{nbits}_div", "fixed_div", nbits, 3 * nbits)
 
 
 def float_div(x, y):
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
-    res, gates = _run(
+    res = _run(
         aritpim.float_div, 32, 32, (x, y),
         bitplanes.f32_to_planes, bitplanes.planes_to_f32,
     )
-    return res, OpCost("float32_div", gates, 3 * 32)
+    return res, _op_cost("float32_div", "float_div", 32, 3 * 32)
 
 
 # Jitted variants (value path only; costs are static per op).

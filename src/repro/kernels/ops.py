@@ -1,37 +1,35 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``pim_float_add/pim_float_mul/pim_fixed_add`` run the recorded NOR schedule
-through the ``pim_bitserial`` kernel (interpret mode on CPU; compiled on a
-real TPU) and convert packed bit-planes back to ordinary arrays.
-``pim_matmul`` is the MatPIM-schedule blocked matmul.
+``pim_float_add/pim_float_mul/pim_bf16_add/pim_bf16_mul/pim_fixed_add`` run
+schedules compiled by the ``repro.core.ir`` pipeline (record → optimization
+passes → liveness column allocation) through the ``pallas`` executor backend
+(interpret mode on CPU; compiled on a real TPU) and convert packed bit-planes
+back to ordinary arrays.  ``pim_matmul`` is the MatPIM-schedule blocked
+matmul.  Everything pulls from the one compile cache keyed by
+``(op, nbits, pass_list)`` — adding an op here is a registration, not a new
+code path.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax.numpy as jnp
 
-from repro.core import aritpim, bitplanes
+from repro.core import bitplanes, ir
 
-from . import pim_bitserial, pim_matmul
+from . import pim_matmul
 
 
-@functools.lru_cache(maxsize=None)
-def _ensure(key: str, nbits: int = 32):
-    sched = aritpim.build_schedule(key, nbits=nbits, compress=True)
-    reg_key = f"{key}{nbits}"
-    pim_bitserial.register_schedule(reg_key, sched)
-    return reg_key, sched
+def _run_planes(op: str, nbits: int, planes: jnp.ndarray, interpret: bool) -> jnp.ndarray:
+    compiled = ir.compile_op(op, nbits=nbits)  # memoized in ir's compile cache
+    return ir.get_backend("pallas").run(compiled, planes, interpret=interpret).planes
 
 
 def _binary_f32(opname: str, x, y, interpret: bool = True):
-    key, sched = _ensure(opname)
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     n = x.shape[0]
     planes = jnp.stack(bitplanes.f32_to_planes(x) + bitplanes.f32_to_planes(y))
-    out = pim_bitserial.run_schedule(key, planes, interpret=interpret)
+    out = _run_planes(opname, 32, planes, interpret)
     return bitplanes.planes_to_f32([out[i] for i in range(32)], n)
 
 
@@ -43,15 +41,43 @@ def pim_float_mul(x, y, interpret: bool = True):
     return _binary_f32("float_mul", x, y, interpret)
 
 
+def _binary_bf16(opname: str, x, y, interpret: bool = True):
+    x = jnp.asarray(x, jnp.bfloat16)
+    y = jnp.asarray(y, jnp.bfloat16)
+    n = x.shape[0]
+    planes = jnp.stack(bitplanes.bf16_to_planes(x) + bitplanes.bf16_to_planes(y))
+    out = _run_planes(opname, 16, planes, interpret)
+    return bitplanes.planes_to_bf16([out[i] for i in range(16)], n)
+
+
+def pim_bf16_add(x, y, interpret: bool = True):
+    return _binary_bf16("bf16_add", x, y, interpret)
+
+
+def pim_bf16_mul(x, y, interpret: bool = True):
+    return _binary_bf16("bf16_mul", x, y, interpret)
+
+
 def pim_fixed_add(x, y, nbits: int = 32, interpret: bool = True):
-    key, sched = _ensure("fixed_add", nbits)
     x = jnp.asarray(x)
     y = jnp.asarray(y)
     n = x.shape[0]
     planes = jnp.stack(
         bitplanes.int_to_planes(x, nbits) + bitplanes.int_to_planes(y, nbits)
     )
-    out = pim_bitserial.run_schedule(key, planes, interpret=interpret)
+    out = _run_planes("fixed_add", nbits, planes, interpret)
+    return bitplanes.planes_to_int([out[i] for i in range(nbits)], n, signed=True)
+
+
+def pim_fixed_mul(x, y, nbits: int = 32, interpret: bool = True):
+    """Signed N×N multiply; returns the low N bits (wrapping, like int mul)."""
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    n = x.shape[0]
+    planes = jnp.stack(
+        bitplanes.int_to_planes(x, nbits) + bitplanes.int_to_planes(y, nbits)
+    )
+    out = _run_planes("fixed_mul", nbits, planes, interpret)
     return bitplanes.planes_to_int([out[i] for i in range(nbits)], n, signed=True)
 
 
@@ -60,6 +86,6 @@ def pim_matmul_op(a, b, *, bm=128, bk=128, bn=128, interpret: bool = True):
 
 
 def schedule_info(opname: str, nbits: int = 32):
-    """(gates, compressed columns) for an op — used by benchmarks/tests."""
-    _, sched = _ensure(opname, nbits)
-    return sched.num_gates, sched.num_cols
+    """(recorded schedule length, allocated columns) — benchmarks/tests."""
+    compiled = ir.compile_op(opname, nbits=nbits)
+    return compiled.recorded_len, compiled.num_cols

@@ -7,12 +7,17 @@ over VMEM-resident planes.  HBM traffic is 2 input planes read + 1 output
 plane written per element bit — independent of schedule length, exactly the
 in-memory property the paper models.
 
+The kernel is the ``pallas`` executor backend of the compiler pipeline
+(DESIGN.md §3–4): it consumes an optimized ``ir.CompiledSchedule`` whose
+static input/output slot maps are baked into the kernel closure, and
+registers itself in ``ir``'s backend registry on import.
+
 Tiling: the grid runs over blocks of the packed-words axis; each program
-holds the *entire* (column-compressed) crossbar state for its word-block in a
-VMEM scratch of shape ``[num_cols, BLOCK_WORDS]``.  The compressed column
-count (≤133 for float32 ops, see ``machine.compress_schedule``) and
-``BLOCK_WORDS=256`` give a ~136 KiB working set — comfortably inside VMEM and
-an exact analogue of one crossbar's 1024-column budget.
+holds the *entire* (column-allocated) crossbar state for its word-block in a
+VMEM scratch of shape ``[num_cols, BLOCK_WORDS]``.  The allocated column
+count (≤133 for float32 ops, see ``ir.lower``) and ``BLOCK_WORDS=256`` give
+a ~136 KiB working set — comfortably inside VMEM and an exact analogue of
+one crossbar's 1024-column budget.
 """
 
 from __future__ import annotations
@@ -24,6 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import ir
 from repro.core.machine import OP_INIT0, OP_INIT1, OP_NOR, Schedule
 
 BLOCK_WORDS = 256
@@ -61,7 +67,9 @@ def _kernel(op_ref, a_ref, b_ref, o_ref, in_ref, out_ref, state, *, input_slots,
 
 @functools.partial(jax.jit, static_argnames=("schedule_key", "interpret"))
 def _run(op, a, b, o, planes, *, schedule_key, interpret):
-    schedule, input_slots, output_slots = _SCHEDULES[schedule_key]
+    compiled = _SCHEDULES[schedule_key]
+    input_slots = compiled.input_slots
+    output_slots = compiled.output_slots
     n_in, W = planes.shape
     n_out = len(output_slots)
     grid = (W // BLOCK_WORDS,)
@@ -77,34 +85,60 @@ def _run(op, a, b, o, planes, *, schedule_key, interpret):
         ],
         out_specs=pl.BlockSpec((n_out, BLOCK_WORDS), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((n_out, W), jnp.uint32),
-        scratch_shapes=[pltpu.VMEM((schedule.num_cols, BLOCK_WORDS), jnp.uint32)],
+        scratch_shapes=[pltpu.VMEM((compiled.num_cols, BLOCK_WORDS), jnp.uint32)],
         interpret=interpret,
     )(op, a, b, o, planes)
 
 
 # Registry of compiled schedules (keyed so jit can treat them as static).
-_SCHEDULES: dict[str, tuple[Schedule, list[int], list[int]]] = {}
+_SCHEDULES: dict[str, ir.CompiledSchedule] = {}
 
 
-def register_schedule(key: str, schedule: Schedule) -> None:
-    input_slots = [c for name in sorted(schedule.input_cols) for c in schedule.input_cols[name]]
-    output_slots = [c for name in sorted(schedule.output_cols) for c in schedule.output_cols[name]]
-    _SCHEDULES[key] = (schedule, input_slots, output_slots)
+def register_compiled(compiled: ir.CompiledSchedule, key: str | None = None) -> str:
+    key = key or compiled.key
+    _SCHEDULES[key] = compiled
+    return key
+
+
+def register_schedule(key: str, schedule: Schedule | ir.CompiledSchedule) -> None:
+    """Register a schedule under ``key``.  Accepts a ``CompiledSchedule`` or a
+    legacy (column-allocated) ``machine.Schedule``, which is wrapped as-is."""
+    if isinstance(schedule, ir.CompiledSchedule):
+        _SCHEDULES[key] = schedule
+        return
+    _SCHEDULES[key] = ir.CompiledSchedule.from_legacy(schedule, key=key)
 
 
 def run_schedule(key: str, planes: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
     """Execute registered schedule ``key`` over stacked input planes.
 
     planes: ``[n_inputs, W]`` uint32 — inputs concatenated in sorted-name
-    order (matching ``register_schedule``).  Returns ``[n_outputs, W]``.
-    W is padded to a BLOCK_WORDS multiple internally.
+    order (matching ``CompiledSchedule.input_slots``).  Returns
+    ``[n_outputs, W]``.  W is padded to a BLOCK_WORDS multiple internally.
     """
-    schedule, input_slots, output_slots = _SCHEDULES[key]
-    assert planes.shape[0] == len(input_slots), (planes.shape, len(input_slots))
+    compiled = _SCHEDULES[key]
+    assert planes.shape[0] == len(compiled.input_slots), (
+        planes.shape, len(compiled.input_slots))
     W = planes.shape[1]
     pad = (-W) % BLOCK_WORDS
     if pad:
         planes = jnp.pad(planes, ((0, 0), (0, pad)))
-    op, a, b, o = schedule.as_arrays()
+    op, a, b, o = compiled.as_arrays()
     out = _run(op, a, b, o, planes, schedule_key=key, interpret=interpret)
     return out[:, :W]
+
+
+class PallasBackend(ir.Backend):
+    """TPU executor: one VMEM-resident crossbar per word-block (interpret
+    mode executes the same kernel body on CPU)."""
+
+    name = "pallas"
+
+    def run(self, compiled, planes=None, interpret: bool = True, **opts):
+        assert planes is not None, "pallas backend needs input planes"
+        key = register_compiled(compiled)
+        out = run_schedule(key, planes, interpret=interpret)
+        return ir.ExecutionResult(out, self.cost(compiled))
+
+
+ir.register_backend(PallasBackend())

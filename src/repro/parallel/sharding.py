@@ -200,7 +200,9 @@ def filter_spec(spec: P, mesh: Mesh) -> P:
             return None
         if isinstance(entry, (tuple, list)):
             kept = tuple(a for a in entry if a in names)
-            return kept if kept else None
+            if not kept:
+                return None
+            return kept[0] if len(kept) == 1 else kept
         return entry if entry in names else None
 
     return P(*(keep(e) for e in tuple(spec)))

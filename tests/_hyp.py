@@ -1,0 +1,65 @@
+"""Deterministic fallback for ``hypothesis`` on bare environments.
+
+Provides exactly the surface this suite uses — ``st.integers``,
+``st.lists(...).map(...)``, ``@given`` and ``@settings(max_examples=,
+deadline=)`` — drawing examples from a seeded RNG so every run sees the same
+cases.  Decorator order must be ``@given`` above ``@settings`` (the order
+used throughout this suite): ``settings`` stamps the example budget on the
+test function and ``given`` reads it.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        max_examples = getattr(fn, "_fallback_max_examples", 10)
+
+        # Deliberately NOT functools.wraps: the wrapper must present a
+        # zero-arg signature or pytest mistakes drawn params for fixtures.
+        def wrapper():
+            for i in range(max_examples):
+                rng = np.random.default_rng(0xC0FFEE + i)
+                drawn = [s.example(rng) for s in strategies]
+                fn(*drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is optional: fall back to deterministic seeded cases
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hyp import given, settings, st
 
 from repro.core import aritpim, bitplanes, simulate
 from repro.core.machine import PlaneVM, compress_schedule, execute_schedule

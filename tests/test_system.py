@@ -92,6 +92,8 @@ def test_offload_analyzer_on_compiled_step():
     }
     c = jax.jit(steps_mod.make_train_step(cfg, opt)).lower(p, o, batch).compile()
     ca = c.cost_analysis()
+    if isinstance(ca, list):  # older jax: one dict per computation
+        ca = ca[0]
     w = Workload("smoke-train", flops=float(ca["flops"]),
                  hbm_bytes=float(ca.get("bytes accessed", 1.0)))
     v = analyze(w)
