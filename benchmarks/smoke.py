@@ -1,0 +1,46 @@
+"""CI benchmark smoke: run the fig3/fig4 tables end-to-end and fail loudly.
+
+Benchmark modules are import-time consumers of the whole compiler pipeline
+(both logic bases), so running them on CPU catches silent rot — an op that
+stops compiling, a basis whose columns go missing, a table that comes back
+empty — without asserting any particular performance number.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.smoke``  (exits non-zero on any
+exception, empty table, or row with missing values).
+"""
+
+from __future__ import annotations
+
+import sys
+
+from . import fig3_arith, fig4_cc
+
+# Columns every row of each table must carry a non-empty value for.
+_REQUIRED = {
+    "fig3_arith": ("gates_recorded", "dram_maj_gates", "dram_cycles",
+                   "dram_peak_rows", "memristive_tops_ours", "dram_tops_ours"),
+    "fig4_cc": ("cc", "pim_tops", "dram_cycles", "improvement_vs_gpu_membound"),
+}
+
+
+def check(name: str, rows: list[dict]) -> None:
+    if not rows:
+        raise SystemExit(f"smoke: {name} produced no rows")
+    for row in rows:
+        for col in _REQUIRED[name]:
+            if row.get(col) in (None, ""):
+                raise SystemExit(f"smoke: {name} row {row.get('name')} missing {col!r}")
+    print(f"smoke: {name} ok ({len(rows)} rows)", file=sys.stderr)
+
+
+def main() -> None:
+    from .common import emit
+
+    for name, mod in (("fig3_arith", fig3_arith), ("fig4_cc", fig4_cc)):
+        rows = mod.run()
+        check(name, rows)
+        emit(rows)
+
+
+if __name__ == "__main__":
+    main()

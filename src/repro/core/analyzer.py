@@ -72,9 +72,23 @@ def pim_time(
     """Bit-serial element-parallel time: FLOPs → add/mul pairs → gate-cycles.
 
     A MAC is one float add + one float mul; full row-parallel occupancy is
-    assumed (upper bound, as in the paper's §5 methodology)."""
-    g = gate_counts or PAPER_GATE_COUNTS
+    assumed (upper bound, as in the paper's §5 methodology).
+
+    For a config whose basis is not memristive (``DRAM_PIM``), the MAC cycle
+    count comes from the basis-native compilation (``ir.op_cost(...,
+    basis=pim.basis)`` — MAJ3/NOT row commands), replacing the paper's
+    clock-scaled parity.  Passing explicit ``gate_counts`` (e.g. the
+    paper-calibrated ones) forces the legacy gates × cycles_per_gate path."""
     n_mac = w.flops / 2.0
+    if gate_counts is None and pim.basis != "memristive":
+        from . import ir
+
+        mac_cycles = (
+            ir.op_cost("float_add", 32, basis=pim.basis).cycles
+            + ir.op_cost("float_mul", 32, basis=pim.basis).cycles
+        )
+        return n_mac * mac_cycles / (pim.total_rows * pim.clock_hz)
+    g = gate_counts or PAPER_GATE_COUNTS
     total_gates = n_mac * (g["float32_add"] + g["float32_mul"])
     return total_gates * pim.cycles_per_gate / (pim.total_rows * pim.clock_hz)
 
@@ -95,7 +109,9 @@ def analyze(
 ) -> OffloadVerdict:
     g = gate_counts or PAPER_GATE_COUNTS
     t_tpu = tpu_time(w, chips, tpu)
-    t_pim = pim_time(w, pim, g)
+    # pass the *original* gate_counts so a non-memristive config takes the
+    # basis-native cycle path (g here is only for the CC-axis thresholds)
+    t_pim = pim_time(w, pim, gate_counts)
     # dominant arithmetic = fp MAC → mean CC of add+mul at the workload dtype
     cc = compute_complexity(g["float32_add"] + g["float32_mul"], 2 * 3 * w.dtype_bits)
     # thresholds from the paper: reuse is "low" below the machine balance

@@ -602,36 +602,69 @@ def bf16_mul(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
 # Schedule recording (consumed by the Pallas kernel and the crossbar checks)
 # --------------------------------------------------------------------------
 
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One registered op: its PlaneVM builder plus I/O width metadata.
+
+    ``in_widths(nbits)`` gives the two input plane counts; ``out_width``
+    the output plane count — together they define the op's I/O bits, the
+    denominator of the paper's compute-complexity metric (so benchmarks
+    derive widths from here instead of parsing op-name strings)."""
+
+    builder: Any
+    in_widths: Any  # nbits -> (wa, wb)
+    out_width: Any  # nbits -> wout
+
+
 _OP_TABLE = {
-    "fixed_add": (fixed_add, lambda n: (n, n)),
-    "fixed_sub": (fixed_sub, lambda n: (n, n)),
-    "fixed_mul": (fixed_mul_signed, lambda n: (n, n)),
-    "fixed_mul_unsigned": (fixed_mul_unsigned, lambda n: (n, n)),
-    "fixed_div": (lambda vm, A, B: fixed_div_signed(vm, A, B)[0], lambda n: (n, n)),
-    "float_add": (float_add, lambda n: (32, 32)),
-    "float_sub": (float_sub, lambda n: (32, 32)),
-    "float_mul": (float_mul, lambda n: (32, 32)),
-    "float_div": (float_div, lambda n: (32, 32)),
-    "bf16_add": (bf16_add, lambda n: (16, 16)),
-    "bf16_mul": (bf16_mul, lambda n: (16, 16)),
+    "fixed_add": OpSpec(fixed_add, lambda n: (n, n), lambda n: n),
+    "fixed_sub": OpSpec(fixed_sub, lambda n: (n, n), lambda n: n),
+    "fixed_mul": OpSpec(fixed_mul_signed, lambda n: (n, n), lambda n: 2 * n),
+    "fixed_mul_unsigned": OpSpec(
+        fixed_mul_unsigned, lambda n: (n, n), lambda n: 2 * n),
+    "fixed_div": OpSpec(
+        lambda vm, A, B: fixed_div_signed(vm, A, B)[0],
+        lambda n: (n, n), lambda n: n),
+    "float_add": OpSpec(float_add, lambda n: (32, 32), lambda n: 32),
+    "float_sub": OpSpec(float_sub, lambda n: (32, 32), lambda n: 32),
+    "float_mul": OpSpec(float_mul, lambda n: (32, 32), lambda n: 32),
+    "float_div": OpSpec(float_div, lambda n: (32, 32), lambda n: 32),
+    "bf16_add": OpSpec(bf16_add, lambda n: (16, 16), lambda n: 16),
+    "bf16_mul": OpSpec(bf16_mul, lambda n: (16, 16), lambda n: 16),
 }
+
+
+def op_widths(op: str, nbits: int = 32) -> tuple[int, int, int]:
+    """(input-a, input-b, output) plane counts of a registered op."""
+    spec = _OP_TABLE[op]
+    wa, wb = spec.in_widths(nbits)
+    return wa, wb, spec.out_width(nbits)
+
+
+def op_io_bits(op: str, nbits: int = 32) -> int:
+    """Input+output bits per element — the CC denominator (paper §3)."""
+    return sum(op_widths(op, nbits))
 
 
 def build_schedule(op: str, nbits: int = 32, compress: bool = True):
     """Record ``op`` into a flat NOR schedule with named I/O columns.
 
-    With ``compress`` the columns are liveness-recycled so the whole program
-    fits the paper's 1024-column crossbar (operands + intermediates)."""
-    from .machine import compress_schedule
-
-    fn, widths = _OP_TABLE[op]
-    wa, wb = widths(nbits)
+    With ``compress`` the columns are liveness-recycled (via ``ir.lower``)
+    so the whole program fits the paper's 1024-column crossbar (operands +
+    intermediates)."""
+    spec = _OP_TABLE[op]
+    wa, wb = spec.in_widths(nbits)
     vm = PlaneVM(mode="record")
     A = [vm.input_plane() for _ in range(wa)]
     B = [vm.input_plane() for _ in range(wb)]
-    out = fn(vm, A, B)
+    out = spec.builder(vm, A, B)
     sched = vm.finish_schedule({"a": A, "b": B}, {"out": out})
-    return compress_schedule(sched) if compress else sched
+    if not compress:
+        return sched
+    from . import ir
+
+    return ir.lower(ir.from_schedule(sched)).to_schedule()
 
 
 # --------------------------------------------------------------------------

@@ -14,11 +14,20 @@ liveness recycling (this absorbs and retires the old
 ``machine.compress_schedule``) and produces a ``CompiledSchedule`` with
 static input/output slot maps.
 
+The pipeline is **basis-parameterized** (``machine.LogicBasis``): ops are
+recorded once in the memristive NOR basis, and ``lower_to_dram`` rewrites the
+SSA program into the DRAM basis' native MAJ3/NOT gates via majority
+identities — the 9-NOR full adder becomes the textbook 3-MAJ/2-NOT form, so
+ripple adders never pay the naive per-NOR expansion.  All passes and the
+allocator are basis-aware, and per-basis costs (row-command cycles, peak
+rows including the reserved DRAM compute rows) replace the old clock-scaled
+parity.
+
 Executor backends share one interface (``Backend.run``) and live in a
 registry: ``interpreter`` (pure-jnp scan), ``pallas`` (the TPU kernel in
 ``repro.kernels.pim_bitserial``, registered lazily) and ``cost`` (analytical
 gate/cycle model — no data movement at all).  Compiled schedules are cached
-by ``(op, nbits, pass_list)`` so every consumer (``kernels.ops``,
+by ``(op, nbits, basis, pass_list)`` so every consumer (``kernels.ops``,
 ``core.simulate``, ``core.analyzer``, benchmarks) pulls from one path.
 
 Registering a new op = one entry in ``aritpim._OP_TABLE``; a new backend =
@@ -40,8 +49,15 @@ from .machine import (
     OP_COPY,
     OP_INIT0,
     OP_INIT1,
+    OP_MAJ3,
     OP_NOR,
+    OP_NOT,
+    OP_WIDTH,
+    LogicBasis,
     Schedule,
+    get_basis,
+    operand_slots,
+    widen_ops,
 )
 
 # ---------------------------------------------------------------------------
@@ -53,7 +69,7 @@ from .machine import (
 class ScheduleIR:
     """SSA gate program: each row defines value ``out`` exactly once."""
 
-    ops: np.ndarray  # [G, 4] int32 (op, a, b, out)
+    ops: np.ndarray  # [G, 5] int32 (op, a, b, c, out)
     num_values: int
     inputs: dict[str, list[int]]  # name -> value ids (declaration order)
     outputs: dict[str, list[int]]  # name -> value ids
@@ -69,6 +85,19 @@ class ScheduleIR:
         """Rows that are NOR gates — the paper's compute-complexity unit."""
         return int((self.ops[:, 0] == OP_NOR).sum())
 
+    @property
+    def maj_gates(self) -> int:
+        return int((self.ops[:, 0] == OP_MAJ3).sum())
+
+    def gate_count(self, basis: str | LogicBasis) -> int:
+        """Rows that are native logic gates under ``basis``."""
+        return get_basis(basis).gate_count(self.ops)
+
+
+def _row_operands(op: int, a: int, b: int, c: int) -> tuple[int, ...]:
+    """Value ids a row actually reads (opcode-dependent arity)."""
+    return tuple((a, b, c)[s] for s in operand_slots(op))
+
 
 def from_schedule(schedule: Schedule) -> ScheduleIR:
     """Lift a freshly *recorded* ``machine.Schedule`` into SSA.
@@ -76,18 +105,20 @@ def from_schedule(schedule: Schedule) -> ScheduleIR:
     Recorded schedules are SSA already (the VM allocates a fresh column per
     gate output); column-allocated schedules are not and are rejected.
     """
+    ops = widen_ops(schedule.ops)
     defined = set()
     for cols in schedule.input_cols.values():
         defined.update(cols)
-    for op, _a, _b, out in schedule.ops:
-        if int(out) in defined:
+    for row in ops:
+        out = int(row[4])
+        if out in defined:
             raise ValueError(
                 "schedule is not SSA (column written twice) — lift before "
                 "column allocation, not after"
             )
-        defined.add(int(out))
+        defined.add(out)
     return ScheduleIR(
-        ops=np.array(schedule.ops, dtype=np.int32).reshape(-1, 4),
+        ops=np.array(ops, dtype=np.int32).reshape(-1, OP_WIDTH),
         num_values=schedule.num_cols,
         inputs={k: list(v) for k, v in schedule.input_cols.items()},
         outputs={k: list(v) for k, v in schedule.output_cols.items()},
@@ -105,7 +136,7 @@ def _resolve(subst: dict[int, int], v: int) -> int:
     return v
 
 
-def _finish(ir: ScheduleIR, gates: list[tuple[int, int, int, int]],
+def _finish(ir: ScheduleIR, gates: list[tuple[int, int, int, int, int]],
             subst: dict[int, int], name: str) -> ScheduleIR:
     """Renumber values compactly (inputs first, then kept gates in order)."""
     mapping: dict[int, int] = {}
@@ -117,16 +148,18 @@ def _finish(ir: ScheduleIR, gates: list[tuple[int, int, int, int]],
             ids.append(mapping[c])
         new_inputs[k] = ids
     new_gates = []
-    for op, a, b, out in gates:
-        na = mapping[a] if op in (OP_NOR, OP_COPY) else 0
-        nb = mapping[b] if op == OP_NOR else 0
+    for op, a, b, c, out in gates:
+        row = [op, 0, 0, 0, 0]
+        for s in operand_slots(op):
+            row[1 + s] = mapping[(a, b, c)[s]]
         mapping[out] = len(mapping)
-        new_gates.append((op, na, nb, mapping[out]))
+        row[4] = mapping[out]
+        new_gates.append(tuple(row))
     new_outputs = {
         k: [mapping[_resolve(subst, v)] for v in vs] for k, vs in ir.outputs.items()
     }
     return ScheduleIR(
-        ops=np.asarray(new_gates, dtype=np.int32).reshape(-1, 4),
+        ops=np.asarray(new_gates, dtype=np.int32).reshape(-1, OP_WIDTH),
         num_values=len(mapping),
         inputs=new_inputs,
         outputs=new_outputs,
@@ -136,96 +169,162 @@ def _finish(ir: ScheduleIR, gates: list[tuple[int, int, int, int]],
 
 
 def fold_constants(ir: ScheduleIR) -> ScheduleIR:
-    """INIT/constant folding: NOR with a known-1 operand is INIT0, NOR of two
-    known-0s is INIT1, NOR with a known-0 canonicalizes to NOT (helps CSE)."""
+    """INIT/constant folding, basis-aware.
+
+    NOR: a known-1 operand gives INIT0, two known-0s give INIT1, one known-0
+    canonicalizes to NOT (helps CSE).  NOT of a constant is the opposite
+    INIT.  MAJ3: two constant operands decide the vote (two 1s → INIT1, two
+    0s → INIT0, a 1 and a 0 → the remaining operand); two *equal* operands
+    decide it too (MAJ(x, x, y) = x)."""
     subst: dict[int, int] = {}
     const: dict[int, int] = {}
-    gates: list[tuple[int, int, int, int]] = []
-    for op, a, b, out in ir.ops:
-        op, a, b, out = int(op), int(a), int(b), int(out)
-        if op == OP_INIT0:
-            const[out] = 0
-            gates.append((op, 0, 0, out))
-        elif op == OP_INIT1:
-            const[out] = 1
-            gates.append((op, 0, 0, out))
+    gates: list[tuple[int, int, int, int, int]] = []
+    for op, a, b, c, out in ir.ops:
+        op, a, b, c, out = int(op), int(a), int(b), int(c), int(out)
+        if op in (OP_INIT0, OP_INIT1):
+            const[out] = 0 if op == OP_INIT0 else 1
+            gates.append((op, 0, 0, 0, out))
         elif op == OP_COPY:
             subst[out] = _resolve(subst, a)
+        elif op == OP_NOT:
+            a = _resolve(subst, a)
+            ca = const.get(a)
+            if ca is not None:
+                const[out] = 1 - ca
+                gates.append((OP_INIT0 if ca == 1 else OP_INIT1, 0, 0, 0, out))
+            else:
+                gates.append((OP_NOT, a, 0, 0, out))
+        elif op == OP_MAJ3:
+            a, b, c = (_resolve(subst, v) for v in (a, b, c))
+            vals = (a, b, c)
+            consts = [const.get(v) for v in vals]
+            ones = consts.count(1)
+            zeros = consts.count(0)
+            if ones >= 2:
+                const[out] = 1
+                gates.append((OP_INIT1, 0, 0, 0, out))
+            elif zeros >= 2:
+                const[out] = 0
+                gates.append((OP_INIT0, 0, 0, 0, out))
+            elif ones == 1 and zeros == 1:
+                # the remaining operand decides the vote
+                rest = [v for v, cv in zip(vals, consts) if cv is None]
+                subst[out] = rest[0]
+            elif a == b or a == c:
+                subst[out] = a  # MAJ(x, x, y) = x
+            elif b == c:
+                subst[out] = b
+            else:
+                gates.append((OP_MAJ3, a, b, c, out))
         else:  # OP_NOR
             a, b = _resolve(subst, a), _resolve(subst, b)
             ca, cb = const.get(a), const.get(b)
             if ca == 1 or cb == 1:
                 const[out] = 0
-                gates.append((OP_INIT0, 0, 0, out))
+                gates.append((OP_INIT0, 0, 0, 0, out))
             elif ca == 0 and cb == 0:
                 const[out] = 1
-                gates.append((OP_INIT1, 0, 0, out))
+                gates.append((OP_INIT1, 0, 0, 0, out))
             elif ca == 0:
-                gates.append((OP_NOR, b, b, out))
+                gates.append((OP_NOR, b, b, 0, out))
             elif cb == 0:
-                gates.append((OP_NOR, a, a, out))
+                gates.append((OP_NOR, a, a, 0, out))
             else:
-                gates.append((OP_NOR, a, b, out))
+                gates.append((OP_NOR, a, b, 0, out))
     return _finish(ir, gates, subst, "fold")
 
 
 def common_subexpr_elim(ir: ScheduleIR, window: int | None = None) -> ScheduleIR:
-    """NOR-level CSE by forward value numbering (operand order normalized).
+    """Gate-level CSE by forward value numbering, basis-aware (NOR and MAJ3
+    operand orders are normalized — both gates are fully commutative).
 
     Merging a recomputation reuses an *old* value, extending its live range —
     which can raise the peak column count the allocator must provision.
-    ``window`` bounds how far back (in kept gates) a NOR may be reused;
-    ``None`` is unbounded.  ``compile_op`` tightens the window adaptively
-    until the schedule fits the unoptimized column budget.
+    ``window`` bounds how far back (in kept gates) a logic gate may be
+    reused; ``None`` is unbounded.  ``compile_op`` tightens the window
+    adaptively until the schedule fits the unoptimized column budget.
     """
     subst: dict[int, int] = {}
     seen: dict[tuple, tuple[int, int]] = {}  # key -> (value, kept index)
-    gates: list[tuple[int, int, int, int]] = []
-    for op, a, b, out in ir.ops:
-        op, a, b, out = int(op), int(a), int(b), int(out)
+    gates: list[tuple[int, int, int, int, int]] = []
+    for op, a, b, c, out in ir.ops:
+        op, a, b, c, out = int(op), int(a), int(b), int(c), int(out)
         if op == OP_COPY:
             subst[out] = _resolve(subst, a)
             continue
         if op in (OP_INIT0, OP_INIT1):
             key = (op,)
-            a = b = 0
-        else:
+            a = b = c = 0
+        elif op == OP_NOT:
+            a = _resolve(subst, a)
+            b = c = 0
+            key = (OP_NOT, a)
+        elif op == OP_MAJ3:
+            a, b, c = sorted(_resolve(subst, v) for v in (a, b, c))
+            key = (OP_MAJ3, a, b, c)
+        else:  # OP_NOR
             a, b = _resolve(subst, a), _resolve(subst, b)
+            c = 0
             key = (OP_NOR, min(a, b), max(a, b))
         hit = seen.get(key)
+        is_logic = op in (OP_NOR, OP_NOT, OP_MAJ3)
         if hit is not None and (
-            op != OP_NOR or window is None or len(gates) - hit[1] <= window
+            not is_logic or window is None or len(gates) - hit[1] <= window
         ):
             subst[out] = hit[0]
             continue
         seen[key] = (out, len(gates))
-        gates.append((op, a, b, out))
+        gates.append((op, a, b, c, out))
     return _finish(ir, gates, subst, "cse" if window is None else f"cse@{window}")
 
 
 def fuse_copies(ir: ScheduleIR) -> ScheduleIR:
     """COPY/NOT fusion: COPYs are propagated away and NOT(NOT(x)) folds to x
-    (the record-mode not-cache catches most, but CSE/fold expose more)."""
+    in either basis representation — ``NOR(v, v)`` or native ``OP_NOT`` (the
+    record-mode not-cache catches most, but CSE/fold/basis-lowering expose
+    more)."""
     subst: dict[int, int] = {}
-    defs: dict[int, tuple[int, int, int]] = {}
-    gates: list[tuple[int, int, int, int]] = []
-    for op, a, b, out in ir.ops:
-        op, a, b, out = int(op), int(a), int(b), int(out)
+    defs: dict[int, tuple] = {}
+    gates: list[tuple[int, int, int, int, int]] = []
+
+    def inverted_input(v: int) -> int | None:
+        """x if value ``v`` is NOT(x) in either representation, else None."""
+        d = defs.get(v)
+        if d is None:
+            return None
+        if d[0] == OP_NOT or (d[0] == OP_NOR and d[1] == d[2]):
+            return d[1]
+        return None
+
+    for op, a, b, c, out in ir.ops:
+        op, a, b, c, out = int(op), int(a), int(b), int(c), int(out)
         if op == OP_COPY:
             subst[out] = _resolve(subst, a)
             continue
         if op == OP_NOR:
             a, b = _resolve(subst, a), _resolve(subst, b)
             if a == b:
-                d = defs.get(a)
-                if d is not None and d[0] == OP_NOR and d[1] == d[2]:
-                    subst[out] = d[1]  # NOT(NOT(x)) == x
+                inner = inverted_input(a)
+                if inner is not None:
+                    subst[out] = inner  # NOT(NOT(x)) == x
                     continue
-            gates.append((OP_NOR, a, b, out))
+            gates.append((OP_NOR, a, b, 0, out))
             defs[out] = (OP_NOR, a, b)
+        elif op == OP_NOT:
+            a = _resolve(subst, a)
+            inner = inverted_input(a)
+            if inner is not None:
+                subst[out] = inner
+                continue
+            gates.append((OP_NOT, a, 0, 0, out))
+            defs[out] = (OP_NOT, a)
+        elif op == OP_MAJ3:
+            a, b, c = (_resolve(subst, v) for v in (a, b, c))
+            gates.append((OP_MAJ3, a, b, c, out))
+            defs[out] = (OP_MAJ3, a, b, c)
         else:
-            gates.append((op, 0, 0, out))
-            defs[out] = (op, 0, 0)
+            gates.append((op, 0, 0, 0, out))
+            defs[out] = (op, 0)
     return _finish(ir, gates, subst, "fuse")
 
 
@@ -234,16 +333,150 @@ def dead_gate_elim(ir: ScheduleIR) -> ScheduleIR:
     live = {v for cols in ir.outputs.values() for v in cols}
     keep = np.zeros(ir.num_gates, dtype=bool)
     for g in range(ir.num_gates - 1, -1, -1):
-        op, a, b, out = (int(x) for x in ir.ops[g])
+        op, a, b, c, out = (int(x) for x in ir.ops[g])
         if out in live:
             keep[g] = True
-            if op == OP_NOR:
-                live.add(a)
-                live.add(b)
-            elif op == OP_COPY:
-                live.add(a)
+            live.update(_row_operands(op, a, b, c))
     gates = [tuple(int(x) for x in row) for row in ir.ops[keep]]
     return _finish(ir, gates, {}, "dce")
+
+
+# ---------------------------------------------------------------------------
+# Basis lowering: NOR → MAJ3/NOT (the dram basis)
+# ---------------------------------------------------------------------------
+
+# The 9-NOR full adder as recorded by machine.PlaneVM.full_adder — gates are
+# emitted contiguously, so the cluster can be matched by shape.  Row k's
+# operands are given as indices into (x, y, cin, n1..n9) = (-3, -2, -1, 0..8).
+_FA_SHAPE = (
+    (-3, -2),  # n1 = NOR(a, b)
+    (-3, 0),   # n2 = NOR(a, n1)
+    (-2, 0),   # n3 = NOR(b, n1)
+    (1, 2),    # n4 = NOR(n2, n3)
+    (3, -1),   # n5 = NOR(n4, c)
+    (4, 0),    # n6 = NOR(n5, n1)  -> carry
+    (3, 4),    # n7 = NOR(n4, n5)
+    (-1, 4),   # n8 = NOR(c, n5)
+    (6, 7),    # n9 = NOR(n7, n8)  -> sum
+)
+# Use counts of the internal values n1..n8 *inside* the cluster: a match also
+# requires they have no uses outside it (and are not outputs).
+_FA_INTERNAL_USES = {0: 3, 1: 1, 2: 1, 3: 2, 4: 3, 6: 1, 7: 1}
+
+
+def lower_to_dram(ir: ScheduleIR) -> ScheduleIR:
+    """Rewrite a NOR-basis SSA program into the DRAM basis (MAJ3/NOT).
+
+    Majority identities used (SIMDRAM-style, DESIGN.md §3):
+
+    * full adder — the recorded 9-NOR cluster becomes the textbook
+      majority-form adder: ``carry = MAJ(a, b, c)``, ``sum = MAJ(carry',
+      MAJ(a, b, c'), c)`` — 3 MAJ + 2 NOT per bit, so ripple adders do not
+      pay the naive per-NOR expansion (and CSE later merges the ``NOT
+      carry`` each bit computes with the next bit's ``NOT cin``);
+    * ``NOR(x', y') = MAJ(x, y, 0)`` (AND of the uninverted inputs — this is
+      how the schoolbook multiplier's partial products stay 1 gate each);
+    * ``NOR(x, x) = NOT(x)``;
+    * generic ``NOR(x, y) = NOT(MAJ(x, y, 1))``.
+
+    Constants needed by the identities are fresh INIT rows prepended to the
+    program (CSE merges them with any recorded INITs).  The result contains
+    no ``OP_NOR`` rows; outputs keep their value ids.
+    """
+    ops = ir.ops
+    n = ir.num_gates
+    out_vals = {v for cols in ir.outputs.values() for v in cols}
+    uses: dict[int, int] = {}
+    for g in range(n):
+        op, a, b, c, _out = (int(x) for x in ops[g])
+        for v in _row_operands(op, a, b, c):
+            uses[v] = uses.get(v, 0) + 1
+
+    next_val = ir.num_values
+
+    def fresh() -> int:
+        nonlocal next_val
+        next_val += 1
+        return next_val - 1
+
+    consts: dict[int, int] = {}
+    prepend: list[tuple[int, int, int, int, int]] = []
+
+    def const(bit: int) -> int:
+        if bit not in consts:
+            cid = fresh()
+            prepend.append((OP_INIT1 if bit else OP_INIT0, 0, 0, 0, cid))
+            consts[bit] = cid
+        return consts[bit]
+
+    def match_fa(g: int) -> tuple[int, ...] | None:
+        """If rows g..g+8 are a recorded full adder, return (x, y, cin)."""
+        if g + 9 > n:
+            return None
+        if any(int(ops[g + k, 0]) != OP_NOR for k in range(9)):
+            return None
+        x, y = int(ops[g, 1]), int(ops[g, 2])
+        cin = int(ops[g + 4, 2])
+        nvals = [int(ops[g + k, 4]) for k in range(9)]
+        env = {-3: x, -2: y, -1: cin}
+        env.update(enumerate(nvals))
+        for k, (ea, eb) in enumerate(_FA_SHAPE):
+            if int(ops[g + k, 1]) != env[ea] or int(ops[g + k, 2]) != env[eb]:
+                return None
+        for k, internal in _FA_INTERNAL_USES.items():
+            if uses.get(nvals[k], 0) != internal or nvals[k] in out_vals:
+                return None
+        return x, y, cin
+
+    new: list[tuple[int, int, int, int, int]] = []
+    defs: dict[int, tuple[int, int]] = {}  # value -> (OP_NOT, input)
+    g = 0
+    while g < n:
+        fa = match_fa(g)
+        if fa is not None:
+            x, y, cin = fa
+            carry, s = int(ops[g + 5, 4]), int(ops[g + 8, 4])
+            cn, t, nc = fresh(), fresh(), fresh()
+            new.append((OP_NOT, cin, 0, 0, cn))
+            new.append((OP_MAJ3, x, y, cin, carry))
+            new.append((OP_MAJ3, x, y, cn, t))
+            new.append((OP_NOT, carry, 0, 0, nc))
+            new.append((OP_MAJ3, nc, t, cin, s))
+            defs[cn] = (OP_NOT, cin)
+            defs[nc] = (OP_NOT, carry)
+            g += 9
+            continue
+        op, a, b, c, out = (int(v) for v in ops[g])
+        g += 1
+        if op != OP_NOR:
+            new.append((op, a, b, c, out))
+            if op == OP_NOT:
+                defs[out] = (OP_NOT, a)
+            continue
+        if a == b:
+            new.append((OP_NOT, a, 0, 0, out))
+            defs[out] = (OP_NOT, a)
+            continue
+        da, db = defs.get(a), defs.get(b)
+        if da is not None and db is not None:
+            # NOR(x', y') = x AND y = MAJ(x, y, 0)
+            new.append((OP_MAJ3, da[1], db[1], const(0), out))
+            continue
+        t = fresh()
+        new.append((OP_MAJ3, a, b, const(1), t))
+        new.append((OP_NOT, t, 0, 0, out))
+        defs[out] = (OP_NOT, t)
+
+    lowered = ScheduleIR(
+        ops=np.asarray(prepend + new, dtype=np.int32).reshape(-1, OP_WIDTH),
+        num_values=next_val,
+        inputs={k: list(v) for k, v in ir.inputs.items()},
+        outputs={k: list(v) for k, v in ir.outputs.items()},
+        meta=dict(ir.meta),
+        pass_log=ir.pass_log + ("dram",),
+    )
+    lowered.meta["basis"] = "dram"
+    return lowered
 
 
 PASS_REGISTRY = {
@@ -251,6 +484,7 @@ PASS_REGISTRY = {
     "cse": common_subexpr_elim,
     "fuse": fuse_copies,
     "dce": dead_gate_elim,
+    "dram": lower_to_dram,
 }
 
 # fuse after cse exposes new common NORs, so cse runs again before dce.
@@ -284,17 +518,20 @@ class CompiledSchedule:
     """Column-machine program with static I/O slot maps — what backends run.
 
     ``num_cols`` is the linear-scan high-water mark, i.e. the peak number of
-    simultaneously live crossbar columns (operands + intermediates); the
-    paper's memristive config budgets 1024.
+    simultaneously live crossbar columns/rows (operands + intermediates); the
+    paper's memristive config budgets 1024.  ``peak_rows`` additionally
+    counts the basis' reserved compute rows (the DRAM TRA/DCC/constant
+    group), which backends never touch but real hardware must provision.
     """
 
     key: str
-    ops: np.ndarray  # [G, 4] int32, columns recycled
+    ops: np.ndarray  # [G, 5] int32, columns recycled
     num_cols: int
     input_cols: dict[str, list[int]]
     output_cols: dict[str, list[int]]
     recorded_len: int  # schedule rows as recorded (pre-pass)
     recorded_gates: int  # recorded NOR count (the paper's cost unit)
+    basis: str = "memristive"
     pass_log: tuple[str, ...] = ()
     meta: dict = dataclasses.field(default_factory=dict)
 
@@ -307,8 +544,27 @@ class CompiledSchedule:
         return int((self.ops[:, 0] == OP_NOR).sum())
 
     @property
+    def maj_gates(self) -> int:
+        return int((self.ops[:, 0] == OP_MAJ3).sum())
+
+    @property
+    def not_gates(self) -> int:
+        return int((self.ops[:, 0] == OP_NOT).sum())
+
+    @property
+    def native_gates(self) -> int:
+        """Rows that are native logic gates under this schedule's basis
+        (NOR for memristive; MAJ3 + NOT for dram)."""
+        return get_basis(self.basis).gate_count(self.ops)
+
+    @property
     def peak_live_cols(self) -> int:
         return self.num_cols
+
+    @property
+    def peak_rows(self) -> int:
+        """Allocation high-water mark + the basis' reserved compute rows."""
+        return self.num_cols + get_basis(self.basis).compute_rows
 
     @property
     def input_slots(self) -> list[int]:
@@ -318,15 +574,17 @@ class CompiledSchedule:
     def output_slots(self) -> list[int]:
         return [c for name in sorted(self.output_cols) for c in self.output_cols[name]]
 
-    def cycles(self, cycles_per_gate: int = CYCLES_PER_GATE_MEMRISTIVE) -> int:
-        return self.num_gates * cycles_per_gate
+    def cycles(self, cycles_per_gate: int | None = None) -> int:
+        """Command cycles under this schedule's basis (per-opcode weights:
+        AAP/TRA counts for dram, init+evaluate for memristive).  Passing an
+        explicit ``cycles_per_gate`` forces the legacy uniform costing."""
+        if cycles_per_gate is not None:
+            return self.num_gates * cycles_per_gate
+        return get_basis(self.basis).schedule_cycles(self.ops)
 
     def as_arrays(self):
-        return (
-            jnp.asarray(self.ops[:, 0], jnp.int32),
-            jnp.asarray(self.ops[:, 1], jnp.int32),
-            jnp.asarray(self.ops[:, 2], jnp.int32),
-            jnp.asarray(self.ops[:, 3], jnp.int32),
+        return tuple(
+            jnp.asarray(self.ops[:, j], jnp.int32) for j in range(OP_WIDTH)
         )
 
     def to_schedule(self) -> Schedule:
@@ -342,7 +600,7 @@ class CompiledSchedule:
     def from_legacy(cls, schedule: Schedule, key: str) -> "CompiledSchedule":
         """Wrap an already-column-allocated ``machine.Schedule`` as-is (no
         passes ran, so recorded == current counts)."""
-        ops = np.asarray(schedule.ops, np.int32).reshape(-1, 4)
+        ops = widen_ops(schedule.ops)
         return cls(
             key=key,
             ops=ops,
@@ -354,7 +612,8 @@ class CompiledSchedule:
         )
 
 
-def lower(ir: ScheduleIR, key: str = "") -> CompiledSchedule:
+def lower(ir: ScheduleIR, key: str = "", basis: str | LogicBasis = "memristive",
+          ) -> CompiledSchedule:
     """Linear-scan allocation of SSA values onto recycled crossbar columns.
 
     Inputs are allocated first (slots ``0..n_in-1`` in declaration order, the
@@ -362,17 +621,21 @@ def lower(ir: ScheduleIR, key: str = "") -> CompiledSchedule:
     pinned after their final write.  A gate's output column is allocated
     before its operands are freed, matching MAGIC's requirement that the
     output column be initialized while operands still hold their values.
-    """
+
+    Under the ``dram`` basis the allocator also accounts for SIMDRAM's
+    compute-row copies: operands are staged into the reserved TRA/DCC rows
+    (``LogicBasis.compute_rows``, reported via ``peak_rows``), and the AAP
+    copy traffic per opcode is already folded into the basis' cycle weights;
+    ``meta["copy_aaps"]`` records the total operand/result AAPs so the cost
+    model can report data movement separately from TRA compute."""
+    basis = get_basis(basis)
     ops = ir.ops
     n_gates = ops.shape[0]
     last_use: dict[int, int] = {}
     for g in range(n_gates):
-        op, a, b, _out = (int(x) for x in ops[g])
-        if op == OP_NOR:
-            last_use[a] = g
-            last_use[b] = g
-        elif op == OP_COPY:
-            last_use[a] = g
+        op, a, b, c, _out = (int(x) for x in ops[g])
+        for v in _row_operands(op, a, b, c):
+            last_use[v] = g
     protected = {v for cols in ir.outputs.values() for v in cols}
 
     mapping: dict[int, int] = {}
@@ -395,14 +658,20 @@ def lower(ir: ScheduleIR, key: str = "") -> CompiledSchedule:
     # capture their slots now, since non-output inputs are recycled later.
     input_cols = {k: [alloc(c) for c in cols] for k, cols in ir.inputs.items()}
 
-    new_ops = np.zeros((n_gates, 4), dtype=np.int32)
+    copy_aaps = 0
+    new_ops = np.zeros((n_gates, OP_WIDTH), dtype=np.int32)
     for g in range(n_gates):
-        op, a, b, out = (int(x) for x in ops[g])
-        na = mapping[a] if op in (OP_NOR, OP_COPY) else 0
-        nb = mapping[b] if op == OP_NOR else 0
-        nout = alloc(out)
-        new_ops[g] = (op, na, nb, nout)
-        operands = (a, b) if op == OP_NOR else (a,) if op == OP_COPY else ()
+        op, a, b, c, out = (int(x) for x in ops[g])
+        operands = _row_operands(op, a, b, c)
+        row = [op, 0, 0, 0, 0]
+        for s in operand_slots(op):
+            row[1 + s] = mapping[(a, b, c)[s]]
+        row[4] = alloc(out)
+        new_ops[g] = row
+        if op == OP_MAJ3:
+            copy_aaps += len(operands) + 1  # stage into TRA rows + result out
+        elif op == OP_NOT:
+            copy_aaps += 2  # through the DCC row and back
         for v in operands:
             if last_use.get(v, -1) == g and v in mapping and v not in protected:
                 free.append(mapping.pop(v))
@@ -415,29 +684,32 @@ def lower(ir: ScheduleIR, key: str = "") -> CompiledSchedule:
         output_cols={k: [mapping[c] for c in v] for k, v in ir.outputs.items()},
         recorded_len=int(ir.meta.get("recorded_len", n_gates)),
         recorded_gates=int(ir.meta.get("recorded_gates", ir.nor_gates)),
+        basis=basis.name,
         pass_log=ir.pass_log,
-        meta=dict(ir.meta),
+        meta=dict(ir.meta, copy_aaps=copy_aaps),
     )
 
 
 # ---------------------------------------------------------------------------
-# Compilation cache: (op, nbits, pass_list) → CompiledSchedule
+# Compilation cache: (op, nbits, basis, pass_list) → CompiledSchedule
 # ---------------------------------------------------------------------------
 
-_COMPILE_CACHE: dict[tuple[str, int, tuple[str, ...]], CompiledSchedule] = {}
+_COMPILE_CACHE: dict[
+    tuple[str, int, str, tuple[str, ...]], CompiledSchedule
+] = {}
 
 
 def record_op(op: str, nbits: int = 32) -> ScheduleIR:
-    """Record an ``aritpim._OP_TABLE`` builder into SSA IR."""
+    """Record an ``aritpim._OP_TABLE`` builder into SSA IR (NOR basis)."""
     from . import aritpim
     from .machine import PlaneVM
 
-    fn, widths = aritpim._OP_TABLE[op]
-    wa, wb = widths(nbits)
+    spec = aritpim._OP_TABLE[op]
+    wa, wb = spec.in_widths(nbits)
     vm = PlaneVM(mode="record")
     A = [vm.input_plane() for _ in range(wa)]
     B = [vm.input_plane() for _ in range(wb)]
-    out = fn(vm, A, B)
+    out = spec.builder(vm, A, B)
     ir = from_schedule(vm.finish_schedule({"a": A, "b": B}, {"out": out}))
     ir.meta.update(
         op=op, nbits=nbits, recorded_len=ir.num_gates, recorded_gates=vm.gates
@@ -446,21 +718,34 @@ def record_op(op: str, nbits: int = 32) -> ScheduleIR:
 
 
 def compile_op(
-    op: str, nbits: int = 32, passes: tuple[str, ...] = DEFAULT_PASSES
+    op: str,
+    nbits: int = 32,
+    passes: tuple[str, ...] = DEFAULT_PASSES,
+    basis: str | LogicBasis = "memristive",
 ) -> CompiledSchedule:
-    """Record → optimize → lower, cached by ``(op, nbits, pass_list)``."""
+    """Record → basis-lower → optimize → allocate, cached by
+    ``(op, nbits, basis, pass_list)``.
+
+    The column-budget baseline is the *basis-lowered* schedule allocated with
+    no optimization passes, so the CSE window ladder compares like with like
+    on both bases."""
+    basis = get_basis(basis)
     passes = tuple(passes)
-    cache_key = (op, nbits, passes)
+    cache_key = (op, nbits, basis.name, passes)
     hit = _COMPILE_CACHE.get(cache_key)
     if hit is not None:
         return hit
     recorded = record_op(op, nbits)
-    baseline_cols = lower(recorded).num_cols  # the old compress_schedule result
-    key = f"{op}/{nbits}/{'+'.join(passes) if passes else 'raw'}"
+    if basis.name == "dram":
+        recorded = lower_to_dram(recorded)
+        recorded.meta["prepass_gates"] = recorded.gate_count(basis)
+        recorded.meta["prepass_len"] = recorded.num_gates
+    baseline_cols = lower(recorded, basis=basis).num_cols
+    key = f"{op}/{nbits}/{basis.name}/{'+'.join(passes) if passes else 'raw'}"
     compiled = None
     for window in CSE_WINDOW_LADDER if "cse" in passes else (None,):
         optimized = run_passes(recorded, passes, cse_window=window)
-        compiled = lower(optimized, key=key)
+        compiled = lower(optimized, key=key, basis=basis)
         if compiled.num_cols <= baseline_cols:
             break
     compiled.meta["baseline_cols"] = baseline_cols
@@ -475,15 +760,26 @@ def compile_op(
 
 @dataclasses.dataclass(frozen=True)
 class CostReport:
-    """Analytical cost of one vectored schedule execution (length-independent)."""
+    """Analytical cost of one vectored schedule execution (length-independent).
+
+    ``gates`` counts the basis' *native* logic gates actually executed (NOR
+    for memristive, MAJ3 + NOT for dram); ``cycles`` uses the basis'
+    per-opcode command weights (init+evaluate pairs for MAGIC, AAP/TRA row
+    commands for SIMDRAM) — DRAM numbers are independently derived, not
+    clock-scaled memristive ones."""
 
     key: str
-    gates: int  # optimized NOR count actually executed
+    gates: int  # optimized native gate count actually executed
     recorded_gates: int  # recorded NOR count (paper's unit; passes only shrink it)
     schedule_len: int  # optimized rows incl. INITs
-    cycles: int  # schedule_len * cycles_per_gate
-    num_cols: int  # peak live columns
+    cycles: int  # per-basis command cycles for the whole schedule
+    num_cols: int  # peak live columns (liveness high-water mark)
     cycles_per_gate: int = CYCLES_PER_GATE_MEMRISTIVE
+    basis: str = "memristive"
+    maj_gates: int = 0  # dram basis: MAJ3 rows (the TRA count)
+    not_gates: int = 0  # dram basis: NOT rows (DCC activations)
+    peak_rows: int = 0  # num_cols + the basis' reserved compute rows
+    copy_aaps: int = 0  # dram basis: operand/result AAP copies
 
 
 @dataclasses.dataclass
@@ -503,15 +799,25 @@ class Backend:
         raise NotImplementedError
 
     def cost(self, compiled: CompiledSchedule,
-             cycles_per_gate: int = CYCLES_PER_GATE_MEMRISTIVE) -> CostReport:
+             cycles_per_gate: int | None = None) -> CostReport:
+        """Per-basis cost; pass ``cycles_per_gate`` to force legacy uniform
+        per-row costing (the retired clock-scaling convention)."""
         return CostReport(
             key=compiled.key,
-            gates=compiled.nor_gates,
+            gates=compiled.native_gates,
             recorded_gates=compiled.recorded_gates,
             schedule_len=compiled.num_gates,
-            cycles=compiled.num_gates * cycles_per_gate,
+            cycles=compiled.cycles(cycles_per_gate),
             num_cols=compiled.num_cols,
-            cycles_per_gate=cycles_per_gate,
+            cycles_per_gate=(
+                cycles_per_gate if cycles_per_gate is not None
+                else CYCLES_PER_GATE_MEMRISTIVE
+            ),
+            basis=compiled.basis,
+            maj_gates=compiled.maj_gates,
+            not_gates=compiled.not_gates,
+            peak_rows=compiled.peak_rows,
+            copy_aaps=int(compiled.meta.get("copy_aaps", 0)),
         )
 
 
@@ -526,19 +832,23 @@ class InterpreterBackend(Backend):
         state = jnp.zeros((compiled.num_cols, planes.shape[1]), jnp.uint32)
         state = state.at[jnp.asarray(compiled.input_slots)].set(
             jnp.asarray(planes, jnp.uint32))
-        op, a, b, out = compiled.as_arrays()
+        op, a, b, c, out = compiled.as_arrays()
 
         def step(state, g):
-            op_g, a_g, b_g, out_g = g
+            op_g, a_g, b_g, c_g, out_g = g
             va = state[a_g]
             vb = state[b_g]
+            vc = state[c_g]
             nor = ~(va | vb) & UMAX
+            maj = (va & vb) | (va & vc) | (vb & vc)
             res = jnp.where(op_g == OP_NOR, nor,
+                  jnp.where(op_g == OP_MAJ3, maj,
+                  jnp.where(op_g == OP_NOT, ~va & UMAX,
                   jnp.where(op_g == OP_INIT0, jnp.zeros_like(nor),
-                  jnp.where(op_g == OP_INIT1, jnp.full_like(nor, UMAX), va)))
+                  jnp.where(op_g == OP_INIT1, jnp.full_like(nor, UMAX), va)))))
             return state.at[out_g].set(res), None
 
-        state, _ = jax.lax.scan(step, state, (op, a, b, out))
+        state, _ = jax.lax.scan(step, state, (op, a, b, c, out))
         return ExecutionResult(state[jnp.asarray(compiled.output_slots)],
                                self.cost(compiled))
 
@@ -550,7 +860,7 @@ class CostModelBackend(Backend):
     name = "cost"
 
     def run(self, compiled, planes=None,
-            cycles_per_gate: int = CYCLES_PER_GATE_MEMRISTIVE, **opts):
+            cycles_per_gate: int | None = None, **opts):
         return ExecutionResult(None, self.cost(compiled, cycles_per_gate))
 
 
@@ -584,8 +894,9 @@ register_backend(CostModelBackend())
 
 
 def op_cost(op: str, nbits: int = 32,
-            passes: tuple[str, ...] = DEFAULT_PASSES) -> CostReport:
-    return get_backend("cost").run(compile_op(op, nbits, passes)).cost
+            passes: tuple[str, ...] = DEFAULT_PASSES,
+            basis: str | LogicBasis = "memristive") -> CostReport:
+    return get_backend("cost").run(compile_op(op, nbits, passes, basis)).cost
 
 
 def netlist_gate_counts(nbits: int = 32) -> dict[str, int]:

@@ -11,8 +11,13 @@ modeled, matching the paper:
   32-bit fixed add on the 48 GB memristive configuration).
 * **dram** (SIMDRAM-style): MAJ3/NOT via triple-row activation.  The paper
   applies identical schedule lengths with a different clock (its DRAM numbers
-  are exactly the memristive ones scaled by 0.5 MHz / 333 MHz), and we follow
-  that convention; see ``costmodel.py``.
+  are exactly the memristive ones scaled by 0.5 MHz / 333 MHz).  That
+  clock-scaling convention is **retired**: the ``dram`` :class:`LogicBasis`
+  now lowers NOR schedules to genuine MAJ3/NOT programs (``ir.lower_to_dram``)
+  and costs them in row commands — each MAJ3 is 3 operand-copy AAPs + 1
+  triple-row activation + 1 result AAP, each NOT 2 AAPs through the
+  dual-contact rows — so DRAM gate counts, cycles and peak rows are
+  independently derived rather than scaled memristive numbers.
 
 ``PlaneVM`` is the single source of truth for arithmetic algorithms: the same
 algorithm code runs in
@@ -38,23 +43,131 @@ import numpy as np
 from .bitplanes import UMAX
 
 CYCLES_PER_GATE_MEMRISTIVE = 2  # MAGIC: init + evaluate
-CYCLES_PER_GATE_DRAM = 2  # SIMDRAM AAP pair (paper's clock-scaled parity)
+CYCLES_PER_GATE_DRAM = 2  # retired clock-scaled parity; kept for comparisons
 
-# Schedule opcodes (NOR-only basis; INIT0/INIT1 are column initializations).
+# Schedule opcodes.  Rows are ``(op, a, b, c, out)``; NOR reads (a, b), MAJ3
+# reads (a, b, c), NOT/COPY read (a), INIT0/INIT1 read nothing.
 OP_NOR = 0
 OP_INIT0 = 1
 OP_INIT1 = 2
-OP_COPY = 3  # buffered copy (2 NOTs fused); costs one gate slot
+OP_COPY = 3  # buffered copy (2 NOTs fused / 1 AAP); costs one gate slot
+OP_NOT = 4  # dram-native inversion (dual-contact row AAP pair)
+OP_MAJ3 = 5  # dram-native 3-input majority (triple-row activation)
+
+OP_WIDTH = 5  # columns per schedule row
+
+
+def operand_slots(op: int) -> tuple[int, ...]:
+    """Which of the (a, b, c) fields an opcode actually reads (0-indexed)."""
+    if op == OP_NOR:
+        return (0, 1)
+    if op == OP_MAJ3:
+        return (0, 1, 2)
+    if op in (OP_COPY, OP_NOT):
+        return (0,)
+    return ()
+
+
+def widen_ops(ops: np.ndarray) -> np.ndarray:
+    """Normalize an op array to the 5-column ``(op, a, b, c, out)`` layout.
+
+    Legacy 4-column ``(op, a, b, out)`` rows (NOR-basis only) get a zero
+    ``c`` operand spliced in before the output column."""
+    ops = np.asarray(ops, dtype=np.int32)
+    if ops.size == 0:
+        return ops.reshape(-1, OP_WIDTH)
+    if ops.shape[1] == OP_WIDTH:
+        return ops
+    assert ops.shape[1] == 4, ops.shape
+    wide = np.zeros((ops.shape[0], OP_WIDTH), dtype=np.int32)
+    wide[:, :3] = ops[:, :3]
+    wide[:, 4] = ops[:, 3]
+    return wide
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicBasis:
+    """One digital-PIM gate basis: which opcodes are native logic gates and
+    what each schedule row costs in that technology's command cycles.
+
+    * ``memristive`` — MAGIC stateful logic: NOR is the native gate; every
+      row costs 2 cycles (output-column FALSE init + evaluation).
+    * ``dram`` — SIMDRAM-style triple-row activation: MAJ3/NOT are native.
+      Operands must be copied into the reserved compute-row group before a
+      TRA destroys them, so a MAJ3 row costs 3 operand AAPs + 1 TRA + 1
+      result AAP; NOT costs 2 AAPs (through a dual-contact row); COPY/INIT
+      are single AAPs from a source/reserved-constant row.
+    """
+
+    name: str
+    gate_opcodes: frozenset[int]  # rows counted as native logic gates
+    op_cycles: tuple[tuple[int, int], ...]  # opcode -> row-command cycles
+    compute_rows: int = 0  # reserved rows (TRA group, DCC pair, constants)
+
+    def cycles_for(self, op: int) -> int:
+        return dict(self.op_cycles)[op]
+
+    def schedule_cycles(self, ops: np.ndarray) -> int:
+        """Total command cycles of a compiled op array under this basis."""
+        ops = widen_ops(ops)
+        table = dict(self.op_cycles)
+        codes, counts = np.unique(ops[:, 0], return_counts=True)
+        return int(sum(table[int(c)] * int(n) for c, n in zip(codes, counts)))
+
+    def gate_count(self, ops: np.ndarray) -> int:
+        ops = widen_ops(ops)
+        return int(np.isin(ops[:, 0], list(self.gate_opcodes)).sum())
+
+
+MEMRISTIVE_BASIS = LogicBasis(
+    name="memristive",
+    gate_opcodes=frozenset({OP_NOR}),
+    op_cycles=(
+        (OP_NOR, CYCLES_PER_GATE_MEMRISTIVE),
+        (OP_INIT0, CYCLES_PER_GATE_MEMRISTIVE),
+        (OP_INIT1, CYCLES_PER_GATE_MEMRISTIVE),
+        (OP_COPY, CYCLES_PER_GATE_MEMRISTIVE),
+    ),
+    compute_rows=0,
+)
+
+DRAM_BASIS = LogicBasis(
+    name="dram",
+    gate_opcodes=frozenset({OP_MAJ3, OP_NOT}),
+    op_cycles=(
+        (OP_MAJ3, 5),  # 3 operand-copy AAPs + 1 TRA + 1 result AAP
+        (OP_NOT, 2),  # AAP into the DCC row + negated AAP out
+        (OP_COPY, 1),  # single AAP
+        (OP_INIT0, 1),  # AAP from the reserved all-zeros row
+        (OP_INIT1, 1),  # AAP from the reserved all-ones row
+    ),
+    # 3 TRA compute rows + 2 dual-contact rows + all-0/all-1 constant rows:
+    # the subset of SIMDRAM's reserved B-group our opcodes need.
+    compute_rows=7,
+)
+
+BASES: dict[str, LogicBasis] = {b.name: b for b in (MEMRISTIVE_BASIS, DRAM_BASIS)}
+
+
+def get_basis(basis: str | LogicBasis) -> LogicBasis:
+    if isinstance(basis, LogicBasis):
+        return basis
+    return BASES[basis]
 
 
 @dataclasses.dataclass
 class Schedule:
-    """A flat column-op program: one row per gate, ``(op, a, b, out)``."""
+    """A flat column-op program: one row per gate, ``(op, a, b, c, out)``.
 
-    ops: np.ndarray  # [G, 4] int32
+    Legacy 4-column ``(op, a, b, out)`` arrays are widened on construction."""
+
+    ops: np.ndarray  # [G, 5] int32
     num_cols: int
     input_cols: dict[str, list[int]]
     output_cols: dict[str, list[int]]
+
+    def __post_init__(self):
+        self.ops = widen_ops(self.ops)
 
     @property
     def num_gates(self) -> int:
@@ -64,11 +177,8 @@ class Schedule:
         return self.num_gates * cycles_per_gate
 
     def as_arrays(self):
-        return (
-            jnp.asarray(self.ops[:, 0], jnp.int32),
-            jnp.asarray(self.ops[:, 1], jnp.int32),
-            jnp.asarray(self.ops[:, 2], jnp.int32),
-            jnp.asarray(self.ops[:, 3], jnp.int32),
+        return tuple(
+            jnp.asarray(self.ops[:, j], jnp.int32) for j in range(OP_WIDTH)
         )
 
 
@@ -85,8 +195,8 @@ class PlaneVM:
         self.n_words = n_words
         self.gates = 0  # NOR-equivalent gate count (the paper's cost unit)
         self._not_cache: dict[int, Any] = {}
-        # record mode state
-        self._prog: list[tuple[int, int, int, int]] = []
+        # record mode state (rows are (op, a, b, c, out))
+        self._prog: list[tuple[int, int, int, int, int]] = []
         self._next_col = 0
         self._const0 = None
         self._const1 = None
@@ -111,7 +221,7 @@ class PlaneVM:
             return self._const0
         if self._const0 is None:
             self._const0 = self._fresh_col()
-            self._prog.append((OP_INIT0, 0, 0, self._const0))
+            self._prog.append((OP_INIT0, 0, 0, 0, self._const0))
         return self._const0
 
     def const1(self) -> Any:
@@ -121,17 +231,26 @@ class PlaneVM:
             return self._const1
         if self._const1 is None:
             self._const1 = self._fresh_col()
-            self._prog.append((OP_INIT1, 0, 0, self._const1))
+            self._prog.append((OP_INIT1, 0, 0, 0, self._const1))
         return self._const1
 
     # ------------------------------------------------------------ gate basis
     def nor(self, a, b) -> Any:
-        """The primitive gate: 1 gate slot."""
+        """The primitive memristive gate: 1 gate slot."""
         self.gates += 1
         if self.mode == "execute":
             return ~(a | b) & UMAX
         out = self._fresh_col()
-        self._prog.append((OP_NOR, a, b, out))
+        self._prog.append((OP_NOR, a, b, 0, out))
+        return out
+
+    def maj3(self, a, b, c) -> Any:
+        """3-input majority — the dram basis' native gate (1 gate slot)."""
+        self.gates += 1
+        if self.mode == "execute":
+            return ((a & b) | (a & c) | (b & c)) & UMAX
+        out = self._fresh_col()
+        self._prog.append((OP_MAJ3, a, b, c, out))
         return out
 
     def not_(self, a) -> Any:
@@ -217,22 +336,29 @@ class PlaneVM:
     # ------------------------------------------------------------- recording
     def finish_schedule(self, inputs: dict[str, list[int]], outputs: dict[str, list[int]]) -> Schedule:
         assert self.mode == "record"
-        ops = np.asarray(self._prog, dtype=np.int32).reshape(-1, 4)
+        ops = np.asarray(self._prog, dtype=np.int32).reshape(-1, OP_WIDTH)
         return Schedule(ops=ops, num_cols=self._next_col, input_cols=inputs, output_cols=outputs)
 
 
 def compress_schedule(schedule: Schedule) -> Schedule:
-    """Liveness-based column reallocation (compat wrapper over ``ir.lower``).
+    """Deprecated compat wrapper over ``ir.lower`` (liveness column allocation).
 
     The crossbar has a fixed column budget (1024 in the paper's memristive
     config) shared by operands, results and intermediates, so a faithful
-    schedule must recycle columns.  The actual linear-scan allocator now
-    lives in :mod:`repro.core.ir` as the lowering stage of the compiler
-    pipeline; this wrapper lifts a recorded schedule into SSA, lowers it with
-    no optimization passes, and hands back the legacy ``Schedule`` view.
+    schedule must recycle columns.  The actual linear-scan allocator lives in
+    :mod:`repro.core.ir` as the lowering stage of the compiler pipeline; call
+    ``ir.lower(ir.from_schedule(schedule))`` directly instead.
     """
+    import warnings
+
     from . import ir
 
+    warnings.warn(
+        "machine.compress_schedule is deprecated; use "
+        "ir.lower(ir.from_schedule(schedule)) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return ir.lower(ir.from_schedule(schedule)).to_schedule()
 
 

@@ -43,17 +43,26 @@ class ImprovementPoint:
         return self.pim_throughput / self.gpu_membound
 
 
-def fig4_points(pim: PIMConfig, gpu: GPUConfig, gate_counts: dict[str, int]) -> list[ImprovementPoint]:
-    """Reconstruct Fig 4: inverse relation between CC and PIM/GPU improvement."""
+def fig4_points(pim: PIMConfig, gpu: GPUConfig, gate_counts: dict[str, int],
+                io_bits: dict[str, int] | None = None) -> list[ImprovementPoint]:
+    """Reconstruct Fig 4: inverse relation between CC and PIM/GPU improvement.
+
+    ``io_bits`` maps op name → input+output bits per element; pass the widths
+    derived from ``aritpim._OP_TABLE`` metadata (``aritpim.op_io_bits``) as
+    ``benchmarks/fig4_cc.py`` does.  Without it a name-parsing fallback
+    covers the paper's Fig-3/4 op set."""
     out = []
     for op, gates in sorted(gate_counts.items()):
-        nbits = 32 if "32" in op else 16
-        io_bits = (4 if "mul" in op and "fixed" in op else 3) * nbits
-        bytes_per_op = io_bits // 8
+        if io_bits is not None and op in io_bits:
+            bits = io_bits[op]
+        else:
+            nbits = 32 if "32" in op else 16
+            bits = (4 if "mul" in op and "fixed" in op else 3) * nbits
+        bytes_per_op = bits // 8
         out.append(
             ImprovementPoint(
                 op=op,
-                cc=compute_complexity(gates, io_bits),
+                cc=compute_complexity(gates, bits),
                 pim_throughput=pim.op_throughput(gates),
                 gpu_membound=gpu.membound_throughput(bytes_per_op),
             )

@@ -25,7 +25,12 @@ class OpCost:
 
     ``gates`` is the recorded NOR count — the paper's latency unit.
     ``optimized_gates``/``peak_cols`` report what the compiled schedule
-    actually executes after the IR pass pipeline.
+    actually executes after the IR pass pipeline.  The ``dram_*`` properties
+    report the independently derived DRAM-basis compilation of the same
+    netlist (MAJ3/NOT gates, AAP/TRA row-command cycles, peak rows including
+    the reserved compute-row group) — not clock-scaled memristive numbers.
+    They compile lazily on first access (then hit ``ir``'s compile cache),
+    so the bit-exact simulation path never pays a second compile.
     """
 
     name: str
@@ -33,17 +38,42 @@ class OpCost:
     io_bits: int  # input+output bits per element (CC denominator)
     optimized_gates: int = 0  # post-pipeline NOR count (≤ gates)
     peak_cols: int = 0  # peak live crossbar columns after allocation
+    op_key: str = ""  # _OP_TABLE key for the per-basis lookups
+    nbits: int = 32
 
     @property
     def compute_complexity(self) -> float:
         """Paper §3: gates per I/O bit."""
         return self.gates / self.io_bits
 
+    @property
+    def dram(self) -> "ir.CostReport":
+        """The dram-basis CostReport (compiled on first access, then cached)."""
+        return ir.op_cost(self.op_key, self.nbits, basis="dram")
 
-def _op_cost(name: str, op_key: str, nbits: int, io_bits: int) -> OpCost:
+    @property
+    def dram_gates(self) -> int:  # MAJ3+NOT count
+        return self.dram.gates
+
+    @property
+    def dram_maj_gates(self) -> int:  # MAJ3 rows alone (the TRA count)
+        return self.dram.maj_gates
+
+    @property
+    def dram_cycles(self) -> int:  # AAP/TRA row-command cycles
+        return self.dram.cycles
+
+    @property
+    def dram_peak_rows(self) -> int:  # allocation peak + reserved compute rows
+        return self.dram.peak_rows
+
+
+def _op_cost(name: str, op_key: str, nbits: int) -> OpCost:
+    io_bits = aritpim.op_io_bits(op_key, nbits)  # from _OP_TABLE metadata
     rep = ir.op_cost(op_key, nbits)
     return OpCost(name, rep.recorded_gates, io_bits,
-                  optimized_gates=rep.gates, peak_cols=rep.num_cols)
+                  optimized_gates=rep.gates, peak_cols=rep.num_cols,
+                  op_key=op_key, nbits=nbits)
 
 
 def _run(fn, nbits_in, nbits_out, arrays, to_planes, from_planes):
@@ -64,7 +94,7 @@ def fixed_add(x, y, nbits: int = 32):
         functools.partial(bitplanes.int_to_planes, nbits=nbits),
         lambda p, n: bitplanes.planes_to_int(p, n, signed=True),
     )
-    return res, _op_cost(f"fixed{nbits}_add", "fixed_add", nbits, 3 * nbits)
+    return res, _op_cost(f"fixed{nbits}_add", "fixed_add", nbits)
 
 
 def fixed_mul(x, y, nbits: int = 32):
@@ -75,7 +105,7 @@ def fixed_mul(x, y, nbits: int = 32):
         lambda p, n: bitplanes.planes_to_int(p[:32], n, signed=True) if nbits * 2 >= 32
         else bitplanes.planes_to_int(p, n, signed=True),
     )
-    return res, _op_cost(f"fixed{nbits}_mul", "fixed_mul", nbits, 4 * nbits)
+    return res, _op_cost(f"fixed{nbits}_mul", "fixed_mul", nbits)
 
 
 def fixed_mul_full(x, y, nbits: int = 32):
@@ -88,7 +118,7 @@ def fixed_mul_full(x, y, nbits: int = 32):
     P = aritpim.fixed_mul_signed(vm, A, B)
     lo = bitplanes.planes_to_int(P[:nbits], n, signed=False)
     hi = bitplanes.planes_to_int(P[nbits:], n, signed=False)
-    return (lo, hi), _op_cost(f"fixed{nbits}_mul", "fixed_mul", nbits, 4 * nbits)
+    return (lo, hi), _op_cost(f"fixed{nbits}_mul", "fixed_mul", nbits)
 
 
 # ------------------------------------------------------------ floating point
@@ -100,7 +130,7 @@ def float_add(x, y):
         aritpim.float_add, 32, 32, (x, y),
         bitplanes.f32_to_planes, bitplanes.planes_to_f32,
     )
-    return res, _op_cost("float32_add", "float_add", 32, 3 * 32)
+    return res, _op_cost("float32_add", "float_add", 32)
 
 
 def float_sub(x, y):
@@ -110,7 +140,7 @@ def float_sub(x, y):
         aritpim.float_sub, 32, 32, (x, y),
         bitplanes.f32_to_planes, bitplanes.planes_to_f32,
     )
-    return res, _op_cost("float32_sub", "float_sub", 32, 3 * 32)
+    return res, _op_cost("float32_sub", "float_sub", 32)
 
 
 def float_mul(x, y):
@@ -120,7 +150,7 @@ def float_mul(x, y):
         aritpim.float_mul, 32, 32, (x, y),
         bitplanes.f32_to_planes, bitplanes.planes_to_f32,
     )
-    return res, _op_cost("float32_mul", "float_mul", 32, 3 * 32)
+    return res, _op_cost("float32_mul", "float_mul", 32)
 
 
 def bf16_add(x, y):
@@ -130,7 +160,7 @@ def bf16_add(x, y):
         aritpim.bf16_add, 16, 16, (x, y),
         bitplanes.bf16_to_planes, bitplanes.planes_to_bf16,
     )
-    return res, _op_cost("bf16_add", "bf16_add", 16, 3 * 16)
+    return res, _op_cost("bf16_add", "bf16_add", 16)
 
 
 def bf16_mul(x, y):
@@ -140,7 +170,7 @@ def bf16_mul(x, y):
         aritpim.bf16_mul, 16, 16, (x, y),
         bitplanes.bf16_to_planes, bitplanes.planes_to_bf16,
     )
-    return res, _op_cost("bf16_mul", "bf16_mul", 16, 3 * 16)
+    return res, _op_cost("bf16_mul", "bf16_mul", 16)
 
 
 def fixed_div(x, y, nbits: int = 32):
@@ -151,7 +181,7 @@ def fixed_div(x, y, nbits: int = 32):
         functools.partial(bitplanes.int_to_planes, nbits=nbits),
         lambda p, n: bitplanes.planes_to_int(p, n, signed=True),
     )
-    return res, _op_cost(f"fixed{nbits}_div", "fixed_div", nbits, 3 * nbits)
+    return res, _op_cost(f"fixed{nbits}_div", "fixed_div", nbits)
 
 
 def float_div(x, y):
@@ -161,7 +191,7 @@ def float_div(x, y):
         aritpim.float_div, 32, 32, (x, y),
         bitplanes.f32_to_planes, bitplanes.planes_to_f32,
     )
-    return res, _op_cost("float32_div", "float_div", 32, 3 * 32)
+    return res, _op_cost("float32_div", "float_div", 32)
 
 
 # Jitted variants (value path only; costs are static per op).

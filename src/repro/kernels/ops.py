@@ -6,8 +6,9 @@ passes → liveness column allocation) through the ``pallas`` executor backend
 (interpret mode on CPU; compiled on a real TPU) and convert packed bit-planes
 back to ordinary arrays.  ``pim_matmul`` is the MatPIM-schedule blocked
 matmul.  Everything pulls from the one compile cache keyed by
-``(op, nbits, pass_list)`` — adding an op here is a registration, not a new
-code path.
+``(op, nbits, basis, pass_list)`` — adding an op here is a registration, not
+a new code path, and every wrapper takes ``basis="memristive"|"dram"`` to
+execute the NOR or the MAJ3/NOT lowering of the same netlist.
 """
 
 from __future__ import annotations
@@ -19,57 +20,60 @@ from repro.core import bitplanes, ir
 from . import pim_matmul
 
 
-def _run_planes(op: str, nbits: int, planes: jnp.ndarray, interpret: bool) -> jnp.ndarray:
-    compiled = ir.compile_op(op, nbits=nbits)  # memoized in ir's compile cache
+def _run_planes(op: str, nbits: int, planes: jnp.ndarray, interpret: bool,
+                basis: str = "memristive") -> jnp.ndarray:
+    compiled = ir.compile_op(op, nbits=nbits, basis=basis)  # memoized in ir's cache
     return ir.get_backend("pallas").run(compiled, planes, interpret=interpret).planes
 
 
-def _binary_f32(opname: str, x, y, interpret: bool = True):
+def _binary_f32(opname: str, x, y, interpret: bool = True, basis: str = "memristive"):
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     n = x.shape[0]
     planes = jnp.stack(bitplanes.f32_to_planes(x) + bitplanes.f32_to_planes(y))
-    out = _run_planes(opname, 32, planes, interpret)
+    out = _run_planes(opname, 32, planes, interpret, basis)
     return bitplanes.planes_to_f32([out[i] for i in range(32)], n)
 
 
-def pim_float_add(x, y, interpret: bool = True):
-    return _binary_f32("float_add", x, y, interpret)
+def pim_float_add(x, y, interpret: bool = True, basis: str = "memristive"):
+    return _binary_f32("float_add", x, y, interpret, basis)
 
 
-def pim_float_mul(x, y, interpret: bool = True):
-    return _binary_f32("float_mul", x, y, interpret)
+def pim_float_mul(x, y, interpret: bool = True, basis: str = "memristive"):
+    return _binary_f32("float_mul", x, y, interpret, basis)
 
 
-def _binary_bf16(opname: str, x, y, interpret: bool = True):
+def _binary_bf16(opname: str, x, y, interpret: bool = True, basis: str = "memristive"):
     x = jnp.asarray(x, jnp.bfloat16)
     y = jnp.asarray(y, jnp.bfloat16)
     n = x.shape[0]
     planes = jnp.stack(bitplanes.bf16_to_planes(x) + bitplanes.bf16_to_planes(y))
-    out = _run_planes(opname, 16, planes, interpret)
+    out = _run_planes(opname, 16, planes, interpret, basis)
     return bitplanes.planes_to_bf16([out[i] for i in range(16)], n)
 
 
-def pim_bf16_add(x, y, interpret: bool = True):
-    return _binary_bf16("bf16_add", x, y, interpret)
+def pim_bf16_add(x, y, interpret: bool = True, basis: str = "memristive"):
+    return _binary_bf16("bf16_add", x, y, interpret, basis)
 
 
-def pim_bf16_mul(x, y, interpret: bool = True):
-    return _binary_bf16("bf16_mul", x, y, interpret)
+def pim_bf16_mul(x, y, interpret: bool = True, basis: str = "memristive"):
+    return _binary_bf16("bf16_mul", x, y, interpret, basis)
 
 
-def pim_fixed_add(x, y, nbits: int = 32, interpret: bool = True):
+def pim_fixed_add(x, y, nbits: int = 32, interpret: bool = True,
+                  basis: str = "memristive"):
     x = jnp.asarray(x)
     y = jnp.asarray(y)
     n = x.shape[0]
     planes = jnp.stack(
         bitplanes.int_to_planes(x, nbits) + bitplanes.int_to_planes(y, nbits)
     )
-    out = _run_planes("fixed_add", nbits, planes, interpret)
+    out = _run_planes("fixed_add", nbits, planes, interpret, basis)
     return bitplanes.planes_to_int([out[i] for i in range(nbits)], n, signed=True)
 
 
-def pim_fixed_mul(x, y, nbits: int = 32, interpret: bool = True):
+def pim_fixed_mul(x, y, nbits: int = 32, interpret: bool = True,
+                  basis: str = "memristive"):
     """Signed N×N multiply; returns the low N bits (wrapping, like int mul)."""
     x = jnp.asarray(x)
     y = jnp.asarray(y)
@@ -77,7 +81,7 @@ def pim_fixed_mul(x, y, nbits: int = 32, interpret: bool = True):
     planes = jnp.stack(
         bitplanes.int_to_planes(x, nbits) + bitplanes.int_to_planes(y, nbits)
     )
-    out = _run_planes("fixed_mul", nbits, planes, interpret)
+    out = _run_planes("fixed_mul", nbits, planes, interpret, basis)
     return bitplanes.planes_to_int([out[i] for i in range(nbits)], n, signed=True)
 
 
@@ -85,7 +89,7 @@ def pim_matmul_op(a, b, *, bm=128, bk=128, bn=128, interpret: bool = True):
     return pim_matmul.matmul(a, b, bm=bm, bk=bk, bn=bn, interpret=interpret)
 
 
-def schedule_info(opname: str, nbits: int = 32):
+def schedule_info(opname: str, nbits: int = 32, basis: str = "memristive"):
     """(recorded schedule length, allocated columns) — benchmarks/tests."""
-    compiled = ir.compile_op(opname, nbits=nbits)
+    compiled = ir.compile_op(opname, nbits=nbits, basis=basis)
     return compiled.recorded_len, compiled.num_cols

@@ -2,10 +2,12 @@
 
 TPU-native adaptation of the paper's crossbar column ops (DESIGN.md §2): a
 crossbar column over R rows becomes a lane-packed ``uint32`` bit-plane of
-``R/32`` words; the serial NOR schedule becomes a sequence of bitwise VPU ops
-over VMEM-resident planes.  HBM traffic is 2 input planes read + 1 output
-plane written per element bit — independent of schedule length, exactly the
-in-memory property the paper models.
+``R/32`` words; the serial gate schedule becomes a sequence of bitwise VPU
+ops over VMEM-resident planes.  The ``fori_loop`` dispatch executes both
+logic bases — memristive NOR rows and the DRAM basis' MAJ3/NOT rows — so one
+kernel serves every ``(op, nbits, basis, passes)`` compile.  HBM traffic is
+2 input planes read + 1 output plane written per element bit — independent
+of schedule length, exactly the in-memory property the paper models.
 
 The kernel is the ``pallas`` executor backend of the compiler pipeline
 (DESIGN.md §3–4): it consumes an optimized ``ir.CompiledSchedule`` whose
@@ -30,16 +32,24 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import ir
-from repro.core.machine import OP_INIT0, OP_INIT1, OP_NOR, Schedule
+from repro.core.machine import (
+    OP_INIT0,
+    OP_INIT1,
+    OP_MAJ3,
+    OP_NOR,
+    OP_NOT,
+    Schedule,
+)
 
 BLOCK_WORDS = 256
 UMAX32 = 0xFFFFFFFF  # python int: folded into the kernel, not a captured array
 
 
-def _kernel(op_ref, a_ref, b_ref, o_ref, in_ref, out_ref, state, *, input_slots, output_slots):
+def _kernel(op_ref, a_ref, b_ref, c_ref, o_ref, in_ref, out_ref, state, *,
+            input_slots, output_slots):
     # Load this block's input planes into their crossbar columns (static slots).
-    for i, c in enumerate(input_slots):
-        state[c, :] = in_ref[i, :]
+    for i, col in enumerate(input_slots):
+        state[col, :] = in_ref[i, :]
 
     n_gates = op_ref.shape[0]
 
@@ -47,26 +57,33 @@ def _kernel(op_ref, a_ref, b_ref, o_ref, in_ref, out_ref, state, *, input_slots,
         op = op_ref[g]
         a = a_ref[g]
         b = b_ref[g]
+        c = c_ref[g]
         o = o_ref[g]
         va = pl.load(state, (pl.dslice(a, 1), slice(None)))
         vb = pl.load(state, (pl.dslice(b, 1), slice(None)))
+        vc = pl.load(state, (pl.dslice(c, 1), slice(None)))
         nor = ~(va | vb)
+        maj = (va & vb) | (va & vc) | (vb & vc)
         res = jnp.where(
             op == OP_NOR, nor,
-            jnp.where(op == OP_INIT0, jnp.zeros_like(nor),
-                      jnp.where(op == OP_INIT1, jnp.full_like(nor, UMAX32), va)),
+            jnp.where(op == OP_MAJ3, maj,
+                      jnp.where(op == OP_NOT, ~va,
+                                jnp.where(op == OP_INIT0, jnp.zeros_like(nor),
+                                          jnp.where(op == OP_INIT1,
+                                                    jnp.full_like(nor, UMAX32),
+                                                    va)))),
         )
         pl.store(state, (pl.dslice(o, 1), slice(None)), res)
         return 0
 
     jax.lax.fori_loop(0, n_gates, body, 0)
 
-    for i, c in enumerate(output_slots):
-        out_ref[i, :] = state[c, :]
+    for i, col in enumerate(output_slots):
+        out_ref[i, :] = state[col, :]
 
 
 @functools.partial(jax.jit, static_argnames=("schedule_key", "interpret"))
-def _run(op, a, b, o, planes, *, schedule_key, interpret):
+def _run(op, a, b, c, o, planes, *, schedule_key, interpret):
     compiled = _SCHEDULES[schedule_key]
     input_slots = compiled.input_slots
     output_slots = compiled.output_slots
@@ -80,6 +97,7 @@ def _run(op, a, b, o, planes, *, schedule_key, interpret):
             pl.BlockSpec((op.shape[0],), lambda i: (0,)),
             pl.BlockSpec((a.shape[0],), lambda i: (0,)),
             pl.BlockSpec((b.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((c.shape[0],), lambda i: (0,)),
             pl.BlockSpec((o.shape[0],), lambda i: (0,)),
             pl.BlockSpec((n_in, BLOCK_WORDS), lambda i: (0, i)),
         ],
@@ -87,7 +105,7 @@ def _run(op, a, b, o, planes, *, schedule_key, interpret):
         out_shape=jax.ShapeDtypeStruct((n_out, W), jnp.uint32),
         scratch_shapes=[pltpu.VMEM((compiled.num_cols, BLOCK_WORDS), jnp.uint32)],
         interpret=interpret,
-    )(op, a, b, o, planes)
+    )(op, a, b, c, o, planes)
 
 
 # Registry of compiled schedules (keyed so jit can treat them as static).
@@ -123,8 +141,8 @@ def run_schedule(key: str, planes: jnp.ndarray, interpret: bool = True) -> jnp.n
     pad = (-W) % BLOCK_WORDS
     if pad:
         planes = jnp.pad(planes, ((0, 0), (0, pad)))
-    op, a, b, o = compiled.as_arrays()
-    out = _run(op, a, b, o, planes, schedule_key=key, interpret=interpret)
+    op, a, b, c, o = compiled.as_arrays()
+    out = _run(op, a, b, c, o, planes, schedule_key=key, interpret=interpret)
     return out[:, :W]
 
 

@@ -1,7 +1,8 @@
 """Schedule-IR compiler pipeline: pass-by-pass bit-exactness vs the
 execute-mode oracle, gate-count monotonicity, column-budget guarantees,
-backend agreement (interpreter vs Pallas interpret), and the new
-int8/int16/bf16 ops through the same compilation path."""
+backend agreement (interpreter vs Pallas interpret), the new
+int8/int16/bf16 ops through the same compilation path, and the multi-basis
+(memristive NOR vs DRAM MAJ3/NOT) lowering invariants."""
 
 import numpy as np
 import pytest
@@ -9,7 +10,15 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import aritpim, bitplanes, ir, simulate
-from repro.core.machine import OP_INIT0, OP_INIT1, OP_NOR, PlaneVM
+from repro.core.machine import (
+    OP_INIT0,
+    OP_INIT1,
+    OP_MAJ3,
+    OP_NOR,
+    OP_NOT,
+    PlaneVM,
+    get_basis,
+)
 
 np.seterr(all="ignore")
 
@@ -36,13 +45,14 @@ def _check_f32(got, exp):
 
 # ------------------------------------------------------------------- passes
 
+@pytest.mark.parametrize("basis", ["memristive", "dram"])
 @pytest.mark.parametrize("passes", PASS_CONFIGS, ids=lambda p: "+".join(p) or "none")
 @pytest.mark.parametrize("op", ["float_add", "float_mul"])
-def test_each_pass_preserves_float_semantics(op, passes):
-    """Every pass (and the default pipeline) is semantics-preserving: the
-    compiled schedule reproduces IEEE float32 bit-for-bit."""
+def test_each_pass_preserves_float_semantics(op, passes, basis):
+    """Every pass (and the default pipeline) is semantics-preserving on both
+    logic bases: the compiled schedule reproduces IEEE float32 bit-for-bit."""
     x, y = _f32_vec(96, 1), _f32_vec(96, 2)
-    compiled = ir.compile_op(op, passes=passes)
+    compiled = ir.compile_op(op, passes=passes, basis=basis)
     got = _run_f32(compiled, x, y)
     exp = (x + y if op == "float_add" else x * y).astype(np.float32)
     _check_f32(got, exp)
@@ -116,7 +126,7 @@ def test_fuse_not_not_unit():
     sched = vm.finish_schedule({"a": [a], "b": [b]}, {"out": [nn]})
     fused = ir.dead_gate_elim(ir.fuse_copies(ir.from_schedule(sched)))
     assert fused.num_gates == 1  # only the original NOR remains
-    assert fused.outputs["out"][0] == fused.ops[0][3]
+    assert fused.outputs["out"][0] == fused.ops[0][4]  # (op, a, b, c, out)
 
 
 def test_dce_unit():
@@ -270,3 +280,186 @@ def test_netlist_gate_counts_keys():
     g = netlist_gate_counts()
     assert g["fixed32_add"] == 288
     assert set(g) >= {"fixed32_add", "fixed32_mul", "float32_add", "float32_mul"}
+
+
+# --------------------------------------------------- multi-basis (MAJ3/NOT)
+
+def _basis_nbits(op):
+    """Width keeping the all-ops sweep fast: fixed ops at 8 bits, floats at
+    their fixed format widths."""
+    if op.startswith("fixed"):
+        return 8
+    return 16 if op.startswith("bf16") else 32
+
+
+def _random_planes(n_planes, n_words, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.integers(0, 2**32, (n_planes, n_words), dtype=np.uint64).astype(np.uint32)
+    )
+
+
+@pytest.mark.parametrize("op", sorted(aritpim._OP_TABLE))
+def test_all_ops_bit_exact_on_dram_basis(op):
+    """Acceptance: every _OP_TABLE op compiles on the dram basis and the
+    interpreter backend reproduces the execute-mode oracle bit-for-bit on
+    random bit patterns (plane-level comparison, no decode)."""
+    nbits = _basis_nbits(op)
+    wa, wb, wout = aritpim.op_widths(op, nbits)
+    n_words = 2
+    planes = _random_planes(wa + wb, n_words, seed=sum(map(ord, op)))
+
+    vm = PlaneVM(mode="execute", n_words=n_words)
+    A = [planes[i] for i in range(wa)]
+    B = [planes[wa + i] for i in range(wb)]
+    exp = aritpim._OP_TABLE[op].builder(vm, A, B)
+    assert len(exp) == wout
+    exp = np.stack([np.asarray(p) for p in exp])
+
+    compiled = ir.compile_op(op, nbits, basis="dram")
+    assert compiled.basis == "dram"
+    assert compiled.nor_gates == 0  # fully lowered out of the NOR basis
+    got = np.asarray(ir.get_backend("interpreter").run(compiled, planes).planes)
+    assert np.array_equal(got, exp), op
+
+
+@pytest.mark.parametrize("nbits", [8, 16, 32])
+def test_dram_fixed_add_maj_bound(nbits):
+    """Acceptance: the ripple adder's MAJ3 count stays at or below the
+    textbook majority-form full adder (3 MAJ per bit) — the FA rewrite fires
+    instead of the naive per-NOR expansion."""
+    rep = ir.op_cost("fixed_add", nbits, basis="dram")
+    assert rep.maj_gates <= 3 * nbits, (rep.maj_gates, 3 * nbits)
+    assert rep.gates == rep.maj_gates + rep.not_gates
+
+
+@pytest.mark.parametrize("basis", ["memristive", "dram"])
+@pytest.mark.parametrize("op", ["fixed_add", "fixed_mul", "float_add", "float_mul"])
+def test_pipeline_invariants_both_bases(op, basis):
+    """Acceptance: for both bases, passes never increase the native gate
+    count relative to the pre-pass (basis-lowered) program, and peak columns
+    stay within the unoptimized allocation and the crossbar budget."""
+    pre = ir.record_op(op)
+    if basis == "dram":
+        pre = ir.lower_to_dram(pre)
+    baseline = ir.lower(pre, basis=basis)
+    compiled = ir.compile_op(op, basis=basis)
+    assert compiled.native_gates <= pre.gate_count(basis)
+    assert compiled.num_cols <= baseline.num_cols
+    assert compiled.peak_rows <= 1024  # crossbar/subarray row budget
+    assert compiled.meta["baseline_cols"] == baseline.num_cols
+
+
+def test_dram_lowering_unit():
+    """NOR(x', y') folds to MAJ(x, y, 0) and NOR(x, x) to NOT(x)."""
+    vm = PlaneVM(mode="record")
+    a, b = vm.input_plane(), vm.input_plane()
+    na = vm.not_(a)
+    nb = vm.not_(b)
+    and_ab = vm.nor(na, nb)  # a AND b
+    sched = vm.finish_schedule({"a": [a], "b": [b]}, {"out": [and_ab]})
+    lowered = ir.dead_gate_elim(ir.lower_to_dram(ir.from_schedule(sched)))
+    codes = [int(o) for o in lowered.ops[:, 0]]
+    assert codes.count(OP_MAJ3) == 1
+    assert OP_NOR not in codes
+
+
+def test_dram_full_adder_rewrite_unit():
+    """The recorded 9-NOR full adder lowers to 3 MAJ + 2 NOT."""
+    vm = PlaneVM(mode="record")
+    a, b, c = (vm.input_plane() for _ in range(3))
+    s, co = vm.full_adder(a, b, c)
+    sched = vm.finish_schedule({"a": [a], "b": [b], "c": [c]}, {"out": [s, co]})
+    lowered = ir.lower_to_dram(ir.from_schedule(sched))
+    codes = [int(o) for o in lowered.ops[:, 0]]
+    assert codes.count(OP_MAJ3) == 3 and codes.count(OP_NOT) == 2
+    assert OP_NOR not in codes
+
+
+def test_maj3_execute_matches_interpreter():
+    """PlaneVM.maj3 (execute) and the interpreter's OP_MAJ3 agree."""
+    vm = PlaneVM(mode="record")
+    a, b, c = (vm.input_plane() for _ in range(3))
+    m = vm.maj3(a, b, c)
+    sched = vm.finish_schedule({"a": [a], "b": [b], "c": [c]}, {"out": [m]})
+    compiled = ir.lower(ir.from_schedule(sched), basis="dram")
+    planes = _random_planes(3, 4, seed=5)
+    got = np.asarray(ir.get_backend("interpreter").run(compiled, planes).planes[0])
+    va, vb, vc = (np.asarray(planes[i]) for i in range(3))
+    exp = (va & vb) | (va & vc) | (vb & vc)
+    assert np.array_equal(got, exp)
+
+
+def test_per_basis_compile_cache_distinct():
+    m = ir.compile_op("fixed_add", 32)
+    d = ir.compile_op("fixed_add", 32, basis="dram")
+    assert m is not d
+    assert m.basis == "memristive" and d.basis == "dram"
+    assert d is ir.compile_op("fixed_add", 32, basis="dram")  # cached
+
+
+def test_dram_cost_report_cycles():
+    """Cost backend: dram cycles are the AAP/TRA weighted sum (5 per MAJ,
+    2 per NOT, 1 per COPY/INIT), not schedule_len × cycles_per_gate."""
+    rep = ir.op_cost("fixed_add", 32, basis="dram")
+    compiled = ir.compile_op("fixed_add", 32, basis="dram")
+    inits = compiled.num_gates - compiled.maj_gates - compiled.not_gates
+    assert rep.basis == "dram"
+    assert rep.cycles == 5 * rep.maj_gates + 2 * rep.not_gates + inits
+    assert rep.peak_rows == compiled.num_cols + get_basis("dram").compute_rows
+    assert rep.copy_aaps > 0
+    # independently derived, but within 25% of the paper's clock-scaled
+    # convention for the calibration op (576 cycles for fixed32_add)
+    assert abs(rep.cycles - 576) / 576 < 0.25
+
+
+def test_interpreter_and_pallas_agree_on_dram_basis():
+    x, y = _f32_vec(257, 5), _f32_vec(257, 6)
+    compiled = ir.compile_op("float_add", basis="dram")
+    got_i = _run_f32(compiled, x, y, backend="interpreter")
+    got_p = _run_f32(compiled, x, y, backend="pallas")
+    assert np.array_equal(got_i.view(np.uint32), got_p.view(np.uint32))
+
+
+# ------------------------------------------------- division (full pipeline)
+
+@pytest.mark.parametrize("basis", ["memristive", "dram"])
+@pytest.mark.parametrize("nbits", [8, 16])
+def test_fixed_div_compiled_interpreter(nbits, basis):
+    """fixed_div through the full compiled path (all default passes +
+    interpreter backend), vs C truncation-toward-zero semantics."""
+    rng = np.random.default_rng(nbits)
+    lo, hi = -(2 ** (nbits - 1)), 2 ** (nbits - 1)
+    x = rng.integers(lo, hi, 200, dtype=np.int64)
+    y = rng.integers(lo, hi, 200, dtype=np.int64)
+    y[y == 0] = 1  # divide-by-zero convention is tested at the oracle level
+    planes = jnp.stack(
+        bitplanes.int_to_planes(jnp.asarray(x.astype(np.int32)), nbits)
+        + bitplanes.int_to_planes(jnp.asarray(y.astype(np.int32)), nbits)
+    )
+    compiled = ir.compile_op("fixed_div", nbits, basis=basis)
+    out = ir.get_backend("interpreter").run(compiled, planes).planes
+    got = np.asarray(
+        bitplanes.planes_to_int([out[i] for i in range(nbits)], len(x), signed=True)
+    )
+    exp = (np.trunc(x / y)).astype(np.int64)
+    exp = np.where(exp >= hi, exp - (1 << nbits), exp).astype(np.int32)  # INT_MIN/-1 wrap
+    assert np.array_equal(got, exp)
+
+
+@pytest.mark.parametrize("basis", ["memristive", "dram"])
+def test_float_div_compiled_interpreter(basis):
+    """float_div through the full compiled path, bit-exact vs IEEE division
+    including specials (0, inf, nan, subnormals)."""
+    rng = np.random.default_rng(9)
+    x = rng.integers(0, 2**32, 64, dtype=np.uint64).astype(np.uint32).view(np.float32)
+    y = rng.integers(0, 2**32, 64, dtype=np.uint64).astype(np.uint32).view(np.float32)
+    sp = np.array([0.0, -0.0, np.inf, -np.inf, np.nan, 1.0, -1.0, 1e-40, 3.4e38],
+                  dtype=np.float32)
+    x = np.concatenate([x, np.repeat(sp, len(sp))])
+    y = np.concatenate([y, np.tile(sp, len(sp))])
+    compiled = ir.compile_op("float_div", basis=basis)
+    got = _run_f32(compiled, x, y)
+    with np.errstate(all="ignore"):
+        exp = (x / y).astype(np.float32)
+    _check_f32(got, exp)
