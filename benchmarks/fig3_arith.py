@@ -35,7 +35,7 @@ from repro.core.costmodel import (
     TPU_V5E,
 )
 
-from .common import time_fn
+from .common import BASES, run_cli, time_fn
 
 N_ELEMS = 4096
 
@@ -69,13 +69,14 @@ def _inputs(kind: str, rng: np.random.Generator):
     return jnp.asarray(x), jnp.asarray(y)
 
 
-def run() -> list[dict]:
+def run(bases: tuple[str, ...] = BASES,
+        passes: tuple[str, ...] | None = None) -> list[dict]:
     rng = np.random.default_rng(0)
+    passes = ir.DEFAULT_PASSES if passes is None else passes
     rows = []
     for op, (sim, ir_key, nbits, kind) in _OPS.items():
         x, y = _inputs(kind, rng)
-        rep = ir.op_cost(ir_key, nbits)  # warm the compile cache before timing
-        rep_dram = ir.op_cost(ir_key, nbits, basis="dram")
+        rep = ir.op_cost(ir_key, nbits, passes)  # warm the cache before timing
         # eager bit-exact simulation: the 12k–24k-op unrolled mul/div
         # netlists exceed an XLA-CPU MLIR pipeline limit under jit; the
         # column is correctness wall-time, not modeled hardware time
@@ -83,34 +84,43 @@ def run() -> list[dict]:
         ours = rep.recorded_gates
         paper = PAPER_GATE_COUNTS.get(op)  # None for ops with no Fig-3 reference
         bytes_per_op = 3 * (nbits // 8)  # 2 reads + 1 write
-        rows.append({
+        row = {
             "name": f"fig3/{op}",
             "us_per_call": f"{us:.0f}",
             "gates_recorded": ours,
             "gates_optimized": rep.gates,  # post-pipeline (≤ recorded)
             "cols_peak": rep.num_cols,  # ≤ the 1024-column crossbar budget
             "gates_paper": paper if paper is not None else "n/a",
-            "memristive_tops_ours": f"{MEMRISTIVE_PIM.op_throughput(ours)/1e12:.2f}",
-            "memristive_tops_optimized": f"{MEMRISTIVE_PIM.op_throughput(rep.gates)/1e12:.2f}",
-            "memristive_tops_paper_model": (
-                f"{MEMRISTIVE_PIM.op_throughput(paper)/1e12:.2f}"
-                if paper is not None else "n/a"
-            ),
-            "memristive_tops_paper_fig3": (
-                f"{PAPER_PIM_THROUGHPUT[('memristive', op)]/1e12:.2f}"
-                if ('memristive', op) in PAPER_PIM_THROUGHPUT else "n/a"
-            ),
+        }
+        if "memristive" in bases:
+            row.update({
+                "memristive_tops_ours": f"{MEMRISTIVE_PIM.op_throughput(ours)/1e12:.2f}",
+                "memristive_tops_optimized": f"{MEMRISTIVE_PIM.op_throughput(rep.gates)/1e12:.2f}",
+                "memristive_tops_paper_model": (
+                    f"{MEMRISTIVE_PIM.op_throughput(paper)/1e12:.2f}"
+                    if paper is not None else "n/a"
+                ),
+                "memristive_tops_paper_fig3": (
+                    f"{PAPER_PIM_THROUGHPUT[('memristive', op)]/1e12:.2f}"
+                    if ('memristive', op) in PAPER_PIM_THROUGHPUT else "n/a"
+                ),
+            })
+        if "dram" in bases:
             # independently derived dram-basis columns (MAJ3/NOT lowering)
-            "dram_maj_gates": rep_dram.maj_gates,
-            "dram_not_gates": rep_dram.not_gates,
-            "dram_cycles": rep_dram.cycles,
-            "dram_peak_rows": rep_dram.peak_rows,
-            "dram_tops_ours": f"{DRAM_PIM.op_throughput_cycles(rep_dram.cycles)/1e12:.4f}",
-            "dram_tops_clock_scaled": f"{DRAM_PIM.op_throughput(ours)/1e12:.4f}",
-            "dram_tops_paper_fig3": (
-                f"{PAPER_PIM_THROUGHPUT[('dram', op)]/1e12:.4f}"
-                if ('dram', op) in PAPER_PIM_THROUGHPUT else "n/a"
-            ),
+            rep_dram = ir.op_cost(ir_key, nbits, passes, basis="dram")
+            row.update({
+                "dram_maj_gates": rep_dram.maj_gates,
+                "dram_not_gates": rep_dram.not_gates,
+                "dram_cycles": rep_dram.cycles,
+                "dram_peak_rows": rep_dram.peak_rows,
+                "dram_tops_ours": f"{DRAM_PIM.report_throughput(rep_dram)/1e12:.4f}",
+                "dram_tops_clock_scaled": f"{DRAM_PIM.op_throughput(ours)/1e12:.4f}",
+                "dram_tops_paper_fig3": (
+                    f"{PAPER_PIM_THROUGHPUT[('dram', op)]/1e12:.4f}"
+                    if ('dram', op) in PAPER_PIM_THROUGHPUT else "n/a"
+                ),
+            })
+        row.update({
             "gpu_measured_tops": f"{PAPER_GPU_MEASURED.get(op, 0.057e12)/1e12:.3f}",
             "gpu_theoretical_tops": f"{A6000.compute_throughput()/1e12:.1f}",
             "tpu_membound_tops": f"{TPU_V5E.hbm_bw/bytes_per_op/1e12:.3f}",
@@ -118,13 +128,12 @@ def run() -> list[dict]:
             "memr_tops_per_w_ours": f"{MEMRISTIVE_PIM.op_throughput_per_watt(ours)/1e9:.2f}G",
             "gpu_membound_per_w": f"{PAPER_GPU_MEASURED.get(op, 0.057e12)/A6000.max_power_w/1e9:.3f}G",
         })
+        rows.append(row)
     return rows
 
 
 def main():
-    from .common import emit
-
-    emit(run())
+    run_cli(run)
 
 
 if __name__ == "__main__":

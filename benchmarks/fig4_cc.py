@@ -13,6 +13,8 @@ from repro.core import ir, metrics
 from repro.core.aritpim import op_io_bits
 from repro.core.costmodel import A6000, DRAM_PIM, MEMRISTIVE_PIM, PAPER_GATE_COUNTS, TPU_V5E
 
+from .common import BASES, run_cli
+
 # Fig-3/4 op name -> (aritpim._OP_TABLE key, nbits)
 _FIG_OPS = {
     "fixed32_add": ("fixed_add", 32),
@@ -22,39 +24,45 @@ _FIG_OPS = {
 }
 
 
-def run() -> list[dict]:
+def run(bases: tuple[str, ...] = BASES,
+        passes: tuple[str, ...] | None = None) -> list[dict]:
     rows = []
+    passes = ir.DEFAULT_PASSES if passes is None else passes
     io_bits = {name: op_io_bits(key, nbits) for name, (key, nbits) in _FIG_OPS.items()}
     pts = metrics.fig4_points(MEMRISTIVE_PIM, A6000, PAPER_GATE_COUNTS, io_bits=io_bits)
     for p in sorted(pts, key=lambda q: q.cc):
         key, nbits = _FIG_OPS[p.op]
-        rep_dram = ir.op_cost(key, nbits, basis="dram")
-        dram_tops = DRAM_PIM.op_throughput_cycles(rep_dram.cycles)
         # the TPU-era column: same CC axis, improvement vs v5e HBM bound
         io_bytes = io_bits[p.op] // 8
         tpu_membound = TPU_V5E.hbm_bw / io_bytes
-        rows.append({
+        row = {
             "name": f"fig4/{p.op}",
             "us_per_call": "",
             "cc": f"{p.cc:.2f}",
             "pim_tops": f"{p.pim_throughput/1e12:.2f}",
-            "dram_maj_gates": rep_dram.maj_gates,
-            "dram_cycles": rep_dram.cycles,
-            "dram_peak_rows": rep_dram.peak_rows,
-            "dram_tops": f"{dram_tops/1e12:.4f}",
+        }
+        if "dram" in bases:
+            rep_dram = ir.op_cost(key, nbits, passes, basis="dram")
+            dram_tops = DRAM_PIM.report_throughput(rep_dram)
+            row.update({
+                "dram_maj_gates": rep_dram.maj_gates,
+                "dram_cycles": rep_dram.cycles,
+                "dram_peak_rows": rep_dram.peak_rows,
+                "dram_tops": f"{dram_tops/1e12:.4f}",
+                "dram_improvement_vs_gpu_membound": (
+                    f"{dram_tops/(A6000.membound_throughput(io_bytes)):.3f}x"
+                ),
+            })
+        row.update({
             "improvement_vs_gpu_membound": f"{p.improvement:.1f}x",
-            "dram_improvement_vs_gpu_membound": (
-                f"{dram_tops/(A6000.membound_throughput(io_bytes)):.3f}x"
-            ),
             "improvement_vs_tpu_membound": f"{p.pim_throughput/tpu_membound:.1f}x",
         })
+        rows.append(row)
     return rows
 
 
 def main():
-    from .common import emit
-
-    emit(run())
+    run_cli(run)
 
 
 if __name__ == "__main__":

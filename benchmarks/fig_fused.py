@@ -1,0 +1,115 @@
+"""Fused multi-op programs vs separate dispatches — the in-memory payoff.
+
+The paper's core claim is that digital PIM wins exactly when intermediate
+results stay in the array (Fig 3/Fig 8).  This table quantifies it with the
+``repro.pim`` trace-and-compile frontend: the fused MAC ``a*b + c`` compiled
+as **one** schedule vs separate ``mul`` then ``add`` dispatches whose
+product planes round-trip through HBM.  Per dtype and basis it reports
+
+* native gates and per-basis command cycles, fused vs the separate-dispatch
+  sum.  The separate baseline is what the public wrappers actually dispatch
+  (for fixed point that is the *truncated* low-half product program, so the
+  gate comparison isolates true cross-op fusion wins from the truncation
+  win; the legacy full-width ``_OP_TABLE`` dispatch is kept as
+  ``*_separate_fullwidth`` for fixed rows),
+* peak live columns/rows vs the paper's 1024 budget, and
+* HBM traffic — plane counts and bytes (``PIMConfig.report_hbm_bytes``):
+  the fused program moves only its true inputs and outputs, never the
+  intermediate product planes.
+
+``us_per_call`` times the fused interpreter execution on 4096 elements.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.pim as pim
+from repro.core import ir
+from repro.core.costmodel import DRAM_PIM, MEMRISTIVE_PIM
+
+from .common import BASES, run_cli, time_fn
+
+N_ELEMS = 4096
+
+# row name -> (PimType, full-width _OP_TABLE keys + nbits for fixed rows)
+_CASES = {
+    "f32_mac": (pim.f32, None),
+    "bf16_mac": (pim.bf16, None),
+    "int16_mac": (pim.int16, (("fixed_mul", "fixed_add"), 16)),
+    "int8_mac": (pim.int8, (("fixed_mul", "fixed_add"), 8)),
+}
+
+_CONFIGS = {"memristive": MEMRISTIVE_PIM, "dram": DRAM_PIM}
+
+
+def _inputs(dtype, rng):
+    if dtype.kind == "fixed":
+        lo, hi = -(2 ** (dtype.nbits - 1)), 2 ** (dtype.nbits - 1)
+        return tuple(
+            jnp.asarray(rng.integers(lo, hi, N_ELEMS).astype(np.int32))
+            for _ in range(3)
+        )
+    xs = tuple(rng.standard_normal(N_ELEMS).astype(np.float32) for _ in range(3))
+    if dtype.kind == "bf16":
+        return tuple(jnp.asarray(x, jnp.bfloat16) for x in xs)
+    return tuple(jnp.asarray(x) for x in xs)
+
+
+def run(bases: tuple[str, ...] = BASES,
+        passes: tuple[str, ...] | None = None) -> list[dict]:
+    passes = ir.DEFAULT_PASSES if passes is None else passes
+    rng = np.random.default_rng(0)
+    rows = []
+    for name, (dtype, fullwidth) in _CASES.items():
+        mac = pim.compile(lambda a, b, c: a * b + c, dtype=dtype)
+        # what separate dispatches through the public wrappers actually run
+        sep_mul = pim.compile(lambda a, b: a * b, dtype=dtype)
+        sep_add = pim.compile(lambda a, b: a + b, dtype=dtype)
+        x, y, c = _inputs(dtype, rng)
+        mac.compiled(passes=passes)  # warm the cache before timing
+        us = time_fn(
+            lambda: mac(x, y, c, passes=passes, backend="interpreter"),
+            warmup=0, iters=1)
+        fused_mem = mac.cost(passes=passes)
+        row = {
+            "name": f"fig_fused/{name}",
+            "us_per_call": f"{us:.0f}",
+            "hbm_bytes_fused":
+                f"{MEMRISTIVE_PIM.report_hbm_bytes(fused_mem, N_ELEMS):.0f}",
+        }
+        for basis in bases:
+            fused = mac.cost(basis=basis, passes=passes)
+            seps = [sep_mul.cost(basis=basis, passes=passes),
+                    sep_add.cost(basis=basis, passes=passes)]
+            cfg = _CONFIGS[basis]
+            row.update({
+                f"{basis}_gates_fused": fused.gates,
+                f"{basis}_gates_separate": sum(r.gates for r in seps),
+                f"{basis}_cycles_fused": fused.cycles,
+                f"{basis}_cycles_separate": sum(r.cycles for r in seps),
+                f"{basis}_peak_cols_fused": fused.num_cols,
+                f"{basis}_peak_rows_fused": fused.peak_rows,
+                f"{basis}_hbm_planes_fused": fused.hbm_planes,
+                f"{basis}_hbm_planes_separate": sum(r.hbm_planes for r in seps),
+                f"{basis}_hbm_saving":
+                    f"{sum(r.hbm_planes for r in seps)/fused.hbm_planes:.2f}x",
+                f"{basis}_macs_per_s": f"{cfg.report_throughput(fused)/1e12:.4f}T",
+            })
+            if fullwidth is not None:
+                ops_keys, nbits = fullwidth
+                full = sum(
+                    ir.op_cost(k, nbits, passes, basis=basis).gates
+                    for k in ops_keys)
+                row[f"{basis}_gates_separate_fullwidth"] = full
+        rows.append(row)
+    return rows
+
+
+def main():
+    run_cli(run)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,7 @@
 
   fig3_arith      — §3 vectored arithmetic throughput/efficiency
   fig4_cc         — §3 compute-complexity vs improvement
+  fig_fused       — fused multi-op programs (MAC) vs separate dispatches
   fig5_matmul     — §4 batched matmul reuse crossover
   fig6_cnn_infer  — §5 CNN inference
   fig7_cnn_train  — §5 CNN training
@@ -17,11 +18,13 @@ import traceback
 
 
 def main() -> None:
-    from . import fig3_arith, fig4_cc, fig5_matmul, fig6_cnn_infer, fig7_cnn_train, roofline_table
+    from . import (fig3_arith, fig4_cc, fig5_matmul, fig6_cnn_infer,
+                   fig7_cnn_train, fig_fused, roofline_table)
     from .common import emit
 
     failures = 0
-    for mod in (fig3_arith, fig4_cc, fig5_matmul, fig6_cnn_infer, fig7_cnn_train, roofline_table):
+    for mod in (fig3_arith, fig4_cc, fig_fused, fig5_matmul, fig6_cnn_infer,
+                fig7_cnn_train, roofline_table):
         try:
             emit(mod.run())
         except Exception:  # noqa: BLE001

@@ -1,9 +1,12 @@
-"""CI benchmark smoke: run the fig3/fig4 tables end-to-end and fail loudly.
+"""CI benchmark smoke: run the compiler-facing tables end-to-end, fail loudly.
 
 Benchmark modules are import-time consumers of the whole compiler pipeline
-(both logic bases), so running them on CPU catches silent rot — an op that
-stops compiling, a basis whose columns go missing, a table that comes back
-empty — without asserting any particular performance number.
+(both logic bases, single-op and fused multi-op programs), so running them
+on CPU catches silent rot — an op that stops compiling, a basis whose
+columns go missing, a table that comes back empty — without asserting any
+particular performance number.  The compile-cache hit/miss counters are
+printed at the end so cache regressions (e.g. a wrapper recompiling what
+``compile_op`` already built) are visible in CI logs.
 
 Usage: ``PYTHONPATH=src python -m benchmarks.smoke``  (exits non-zero on any
 exception, empty table, or row with missing values).
@@ -13,13 +16,22 @@ from __future__ import annotations
 
 import sys
 
-from . import fig3_arith, fig4_cc
+from repro.core import ir
+
+from . import fig3_arith, fig4_cc, fig5_matmul, fig_fused
 
 # Columns every row of each table must carry a non-empty value for.
 _REQUIRED = {
     "fig3_arith": ("gates_recorded", "dram_maj_gates", "dram_cycles",
                    "dram_peak_rows", "memristive_tops_ours", "dram_tops_ours"),
     "fig4_cc": ("cc", "pim_tops", "dram_cycles", "improvement_vs_gpu_membound"),
+    "fig5_matmul": ("reuse_flops_per_byte", "pim_pairs_per_s",
+                    "memristive_fusedmac_pairs_per_s", "dram_fusedmac_pairs_per_s",
+                    "tpu_membound_pairs_per_s"),
+    "fig_fused": ("memristive_gates_fused", "memristive_gates_separate",
+                  "memristive_hbm_planes_fused", "dram_cycles_fused",
+                  "dram_hbm_planes_separate", "memristive_macs_per_s",
+                  "hbm_bytes_fused"),
 }
 
 
@@ -36,10 +48,14 @@ def check(name: str, rows: list[dict]) -> None:
 def main() -> None:
     from .common import emit
 
-    for name, mod in (("fig3_arith", fig3_arith), ("fig4_cc", fig4_cc)):
+    for name, mod in (("fig3_arith", fig3_arith), ("fig4_cc", fig4_cc),
+                      ("fig_fused", fig_fused), ("fig5_matmul", fig5_matmul)):
         rows = mod.run()
         check(name, rows)
         emit(rows)
+    stats = ir.cache_stats()
+    print(f"smoke: compile cache hits={stats['hits']} misses={stats['misses']}",
+          file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,7 @@
 """Quickstart: the paper's core loop in 60 lines.
 
-1. Run bit-exact digital-PIM arithmetic (AritPIM suite) on vectors.
-2. Price the same ops on the paper's PIM configs and on GPU/TPU rooflines.
+1. Compile and run a fused element-wise PIM program (`repro.pim` frontend).
+2. Price it on both logic bases and against separate dispatches.
 3. Ask the Fig-8 analyzer where a workload should run.
 
   PYTHONPATH=src python examples/quickstart.py
@@ -9,25 +9,41 @@
 
 import numpy as np
 
-from repro.core import simulate
+import repro.pim as pim
+from repro.core import ir
 from repro.core.analyzer import Workload, analyze
-from repro.core.costmodel import DRAM_PIM, MEMRISTIVE_PIM, PAPER_GATE_COUNTS
+from repro.core.costmodel import DRAM_PIM, MEMRISTIVE_PIM
 
-# --- 1. bit-exact in-memory arithmetic (element-parallel across rows)
+# --- 1. trace-and-compile a fused MAC: one in-memory schedule, the
+#        intermediate product planes never round-trip through HBM
 rng = np.random.default_rng(0)
 x = rng.standard_normal(1024).astype(np.float32)
 y = rng.standard_normal(1024).astype(np.float32)
+c = rng.standard_normal(1024).astype(np.float32)
 
-z, cost = simulate.float_add(x, y)
-assert (np.asarray(z).view(np.uint32) == (x + y).view(np.uint32)).all()
-print(f"float32 add: bit-exact over {x.size} lanes; "
-      f"{cost.gates} NOR gates/element, CC={cost.compute_complexity:.1f}")
+mac = pim.compile(lambda a, b, z: a * b + z, dtype=pim.f32)
+out = mac(x, y, c)  # Pallas executor (interpret mode on CPU), bit-exact
+exp = (x * y + c).astype(np.float32)
+assert (np.asarray(out).view(np.uint32) == exp.view(np.uint32)).all()
+print(f"fused f32 MAC: bit-exact over {x.size} lanes")
 
-# --- 2. the analytical cost model (calibrated to the paper's Fig 3)
-for tech, cfg in (("memristive", MEMRISTIVE_PIM), ("dram", DRAM_PIM)):
-    tput = cfg.op_throughput(PAPER_GATE_COUNTS["float32_add"])
-    print(f"{tech:11s} float32 add: {tput/1e12:6.2f} TOPS "
-          f"@ {cfg.max_power_w:.0f} W  ({cfg.num_crossbars} crossbars)")
+# --- 2. program-level cost vs separate dispatches, on both bases
+sep = [ir.op_cost("float_mul"), ir.op_cost("float_add")]
+for basis, cfg in (("memristive", MEMRISTIVE_PIM), ("dram", DRAM_PIM)):
+    rep = mac.cost(basis=basis)
+    print(f"{basis:11s} MAC: {rep.gates} gates, {rep.cycles} cycles, "
+          f"peak {rep.peak_rows or rep.num_cols} rows, "
+          f"{cfg.report_throughput(rep)/1e12:.3f} TMAC/s")
+print(f"HBM planes/dispatch: fused {mac.cost().hbm_planes} vs "
+      f"separate mul+add {sum(r.hbm_planes for r in sep)} — "
+      "the in-memory advantage the paper's Fig 3/8 story is about")
+
+# int8 MAC: the program's int8 result type means DCE deletes the dead high
+# product half that a full-width 2n-bit fixed_mul dispatch must compute
+mac8 = pim.compile(lambda a, b, z: a * b + z, dtype=pim.int8)
+sep8 = sum(ir.op_cost(o, 8).gates for o in ("fixed_mul", "fixed_add"))
+print(f"int8 MAC gates: fused {mac8.cost().gates} vs full-width dispatches {sep8}; "
+      f"HBM planes {mac8.cost().hbm_planes} vs 48")
 
 # --- 3. offload decision (paper Fig 8): CC × reuse quadrants
 decode = Workload("llm-decode bs=1 (3B params)", flops=2 * 3e9, hbm_bytes=2 * 3e9)

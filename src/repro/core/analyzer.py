@@ -75,19 +75,19 @@ def pim_time(
     assumed (upper bound, as in the paper's §5 methodology).
 
     For a config whose basis is not memristive (``DRAM_PIM``), the MAC cycle
-    count comes from the basis-native compilation (``ir.op_cost(...,
-    basis=pim.basis)`` — MAJ3/NOT row commands), replacing the paper's
-    clock-scaled parity.  Passing explicit ``gate_counts`` (e.g. the
-    paper-calibrated ones) forces the legacy gates × cycles_per_gate path."""
+    count is the program-level cost of the **fused** ``a*b + c`` compilation
+    (``simulate.mac_cost`` → ``ir.compile_program``, MAJ3/NOT row commands)
+    — one composed schedule whose intermediate product planes never leave
+    the array, replacing both the paper's clock-scaled parity and the
+    separate add+mul dispatch sum.  Passing explicit ``gate_counts`` (e.g.
+    the paper-calibrated ones) forces the legacy gates × cycles_per_gate
+    path."""
     n_mac = w.flops / 2.0
     if gate_counts is None and pim.basis != "memristive":
-        from . import ir
+        from .simulate import mac_cost
 
-        mac_cycles = (
-            ir.op_cost("float_add", 32, basis=pim.basis).cycles
-            + ir.op_cost("float_mul", 32, basis=pim.basis).cycles
-        )
-        return n_mac * mac_cycles / (pim.total_rows * pim.clock_hz)
+        return n_mac * mac_cost(basis=pim.basis).cycles / (
+            pim.total_rows * pim.clock_hz)
     g = gate_counts or PAPER_GATE_COUNTS
     total_gates = n_mac * (g["float32_add"] + g["float32_mul"])
     return total_gates * pim.cycles_per_gate / (pim.total_rows * pim.clock_hz)

@@ -505,6 +505,12 @@ def bf16_add(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
     return float_add_fmt(vm, A, B, BFLOAT16)
 
 
+def bf16_sub(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
+    """bfloat16 subtraction: addition with B's sign plane inverted."""
+    Bneg = list(B[:15]) + [vm.not_(B[15])]
+    return float_add_fmt(vm, A, Bneg, BFLOAT16)
+
+
 def float_mul_fmt(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane],
                   fmt: FloatFormat = FLOAT32):
     """IEEE-754 multiplication for any format: RNE, gradual underflow, Inf/NaN."""
@@ -605,34 +611,71 @@ def bf16_mul(vm: PlaneVM, A: Sequence[Plane], B: Sequence[Plane]):
 
 @dataclasses.dataclass(frozen=True)
 class OpSpec:
-    """One registered op: its PlaneVM builder plus I/O width metadata.
+    """One registered op: its PlaneVM builder plus I/O width and dtype metadata.
 
     ``in_widths(nbits)`` gives the two input plane counts; ``out_width``
     the output plane count — together they define the op's I/O bits, the
     denominator of the paper's compute-complexity metric (so benchmarks
-    derive widths from here instead of parsing op-name strings)."""
+    derive widths from here instead of parsing op-name strings).
+
+    ``arith``/``dtype`` classify the op for the ``repro.pim`` tracer:
+    ``arith`` is the abstract operator (``add``/``sub``/``mul``/``div``) and
+    ``dtype`` the :class:`~repro.core.bitplanes.PimType` kind it implements
+    (``fixed``/``float32``/``bf16``).  Helper netlists that are not a typed
+    arithmetic op (e.g. ``fixed_mul_unsigned``) leave them ``None``."""
 
     builder: Any
     in_widths: Any  # nbits -> (wa, wb)
     out_width: Any  # nbits -> wout
+    arith: str | None = None
+    dtype: str | None = None
 
 
 _OP_TABLE = {
-    "fixed_add": OpSpec(fixed_add, lambda n: (n, n), lambda n: n),
-    "fixed_sub": OpSpec(fixed_sub, lambda n: (n, n), lambda n: n),
-    "fixed_mul": OpSpec(fixed_mul_signed, lambda n: (n, n), lambda n: 2 * n),
+    "fixed_add": OpSpec(fixed_add, lambda n: (n, n), lambda n: n,
+                        arith="add", dtype="fixed"),
+    "fixed_sub": OpSpec(fixed_sub, lambda n: (n, n), lambda n: n,
+                        arith="sub", dtype="fixed"),
+    "fixed_mul": OpSpec(fixed_mul_signed, lambda n: (n, n), lambda n: 2 * n,
+                        arith="mul", dtype="fixed"),
     "fixed_mul_unsigned": OpSpec(
         fixed_mul_unsigned, lambda n: (n, n), lambda n: 2 * n),
     "fixed_div": OpSpec(
         lambda vm, A, B: fixed_div_signed(vm, A, B)[0],
-        lambda n: (n, n), lambda n: n),
-    "float_add": OpSpec(float_add, lambda n: (32, 32), lambda n: 32),
-    "float_sub": OpSpec(float_sub, lambda n: (32, 32), lambda n: 32),
-    "float_mul": OpSpec(float_mul, lambda n: (32, 32), lambda n: 32),
-    "float_div": OpSpec(float_div, lambda n: (32, 32), lambda n: 32),
-    "bf16_add": OpSpec(bf16_add, lambda n: (16, 16), lambda n: 16),
-    "bf16_mul": OpSpec(bf16_mul, lambda n: (16, 16), lambda n: 16),
+        lambda n: (n, n), lambda n: n, arith="div", dtype="fixed"),
+    "float_add": OpSpec(float_add, lambda n: (32, 32), lambda n: 32,
+                        arith="add", dtype="float32"),
+    "float_sub": OpSpec(float_sub, lambda n: (32, 32), lambda n: 32,
+                        arith="sub", dtype="float32"),
+    "float_mul": OpSpec(float_mul, lambda n: (32, 32), lambda n: 32,
+                        arith="mul", dtype="float32"),
+    "float_div": OpSpec(float_div, lambda n: (32, 32), lambda n: 32,
+                        arith="div", dtype="float32"),
+    "bf16_add": OpSpec(bf16_add, lambda n: (16, 16), lambda n: 16,
+                       arith="add", dtype="bf16"),
+    "bf16_sub": OpSpec(bf16_sub, lambda n: (16, 16), lambda n: 16,
+                       arith="sub", dtype="bf16"),
+    "bf16_mul": OpSpec(bf16_mul, lambda n: (16, 16), lambda n: 16,
+                       arith="mul", dtype="bf16"),
 }
+
+_ARITH_INDEX = {
+    (spec.arith, spec.dtype): name
+    for name, spec in _OP_TABLE.items() if spec.arith is not None
+}
+
+
+def op_for(arith: str, dtype: str) -> str:
+    """The ``_OP_TABLE`` key implementing abstract ``arith`` at ``dtype``
+    (a ``PimType.kind``).  Raises ``KeyError`` with the supported set when
+    no netlist exists (e.g. bf16 division)."""
+    try:
+        return _ARITH_INDEX[(arith, dtype)]
+    except KeyError:
+        raise KeyError(
+            f"no netlist for {arith!r} at dtype {dtype!r}; registered: "
+            f"{sorted(_ARITH_INDEX)}"
+        ) from None
 
 
 def op_widths(op: str, nbits: int = 32) -> tuple[int, int, int]:

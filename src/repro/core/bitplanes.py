@@ -7,9 +7,17 @@ column-parallel logic gate over ``R`` rows becomes a single bitwise op over
 the paper's column operation.
 
 An ``N``-bit number vector is a list of ``N`` planes, LSB first.
+
+:class:`PimType` packages one element type's plane layout (width, packing,
+unpacking) so frontends and kernels share a single description instead of
+per-dtype boilerplate: ``F32``/``BF16`` for the IEEE formats, ``fixed(n)``
+for two's-complement integers.  The ``repro.pim`` tracer picks netlists by
+``PimType.kind`` via the ``aritpim.OpSpec`` dtype metadata.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
@@ -108,6 +116,61 @@ def jax_bitcast_f32(x: jnp.ndarray) -> jnp.ndarray:
     import jax
 
     return jax.lax.bitcast_convert_type(x, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Typed plane layouts (consumed by repro.pim and kernels/ops.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PimType:
+    """One PIM element type: plane count + pack/unpack + netlist selection.
+
+    ``kind`` is the key the tracer matches against ``aritpim.OpSpec.dtype``
+    (``"fixed"`` | ``"float32"`` | ``"bf16"``); ``width`` is planes per
+    element (LSB first); ``nbits`` parameterizes width-generic netlists
+    (equal to ``width`` for every current format)."""
+
+    name: str
+    kind: str
+    width: int
+    nbits: int
+
+    def cast(self, x) -> jnp.ndarray:
+        """Coerce an array to this type's carrier jnp dtype."""
+        if self.kind == "float32":
+            return jnp.asarray(x, jnp.float32)
+        if self.kind == "bf16":
+            return jnp.asarray(x, jnp.bfloat16)
+        return jnp.asarray(x)  # fixed: keep the caller's integer dtype
+
+    def to_planes(self, x) -> list[jnp.ndarray]:
+        """``[n]`` array → ``width`` packed planes (LSB first)."""
+        if self.kind == "float32":
+            return f32_to_planes(x)
+        if self.kind == "bf16":
+            return bf16_to_planes(x)
+        return int_to_planes(x, self.nbits)
+
+    def from_planes(self, planes: list[jnp.ndarray], n_elems: int) -> jnp.ndarray:
+        """Inverse of :meth:`to_planes` (fixed types decode as signed)."""
+        assert len(planes) == self.width, (self.name, len(planes), self.width)
+        if self.kind == "float32":
+            return planes_to_f32(planes, n_elems)
+        if self.kind == "bf16":
+            return planes_to_bf16(planes, n_elems)
+        return planes_to_int(planes, n_elems, signed=True)
+
+
+F32 = PimType("f32", "float32", 32, 32)
+BF16 = PimType("bf16", "bf16", 16, 16)
+
+
+def fixed(nbits: int) -> PimType:
+    """Two's-complement fixed-point type with ``nbits`` planes."""
+    assert 1 <= nbits <= 32
+    return PimType(f"fixed{nbits}", "fixed", nbits, nbits)
 
 
 def np_pack_reference(bits: np.ndarray) -> np.ndarray:

@@ -71,6 +71,18 @@ class PIMConfig:
         independently derived DRAM path; replaces clock-scaled parity)."""
         return self.total_rows * self.clock_hz / cycles
 
+    def report_throughput(self, report) -> float:
+        """Vectored dispatches/second from an ``ir.CostReport`` — works for
+        single ops and fused multi-op programs alike, using the report's
+        per-basis command cycles."""
+        return self.op_throughput_cycles(report.cycles)
+
+    def report_hbm_bytes(self, report, n_elems: int) -> float:
+        """HBM bytes one vectored dispatch moves: the report's boundary
+        bit-planes × the packed plane size.  The metric multi-op fusion
+        shrinks — intermediates of a fused program never cross this line."""
+        return report.hbm_planes * n_elems / 8.0
+
     def op_throughput_per_watt(self, gates: int) -> float:
         return self.op_throughput(gates) / self.max_power_w
 

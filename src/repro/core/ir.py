@@ -23,11 +23,19 @@ allocator are basis-aware, and per-basis costs (row-command cycles, peak
 rows including the reserved DRAM compute rows) replace the old clock-scaled
 parity.
 
+The compilation unit is a multi-op :class:`Program` (``compile_program``):
+per-op ``aritpim`` netlists are recorded into **one** SSA program with the
+output values of each op wired directly into the next, so intermediate
+planes never materialize in HBM and fold/cse/fuse/dce plus the liveness
+allocator all fire across op boundaries.  ``compile_op`` is the one-op
+special case (``Program.single``), sharing the same cache.  Programs are
+built by the ``repro.pim`` trace-and-compile frontend.
+
 Executor backends share one interface (``Backend.run``) and live in a
 registry: ``interpreter`` (pure-jnp scan), ``pallas`` (the TPU kernel in
 ``repro.kernels.pim_bitserial``, registered lazily) and ``cost`` (analytical
 gate/cycle model — no data movement at all).  Compiled schedules are cached
-by ``(op, nbits, basis, pass_list)`` so every consumer (``kernels.ops``,
+by ``(program, basis, pass_list)`` so every consumer (``kernels.ops``,
 ``core.simulate``, ``core.analyzer``, benchmarks) pulls from one path.
 
 Registering a new op = one entry in ``aritpim._OP_TABLE``; a new backend =
@@ -37,6 +45,7 @@ one ``register_backend`` call.  See DESIGN.md §4 and README.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any
 
 import jax
@@ -691,57 +700,177 @@ def lower(ir: ScheduleIR, key: str = "", basis: str | LogicBasis = "memristive",
 
 
 # ---------------------------------------------------------------------------
-# Compilation cache: (op, nbits, basis, pass_list) → CompiledSchedule
+# Multi-op programs: the compile_program frontend artifact
 # ---------------------------------------------------------------------------
 
-_COMPILE_CACHE: dict[
-    tuple[str, int, str, tuple[str, ...]], CompiledSchedule
-] = {}
+
+@dataclasses.dataclass(frozen=True)
+class ProgramOp:
+    """One traced op: an ``aritpim._OP_TABLE`` netlist applied to program
+    values.  ``args`` and ``out`` are value ids — inputs are ``0..n_in-1``,
+    each op defines the next id.  ``width`` is how many planes of the
+    builder's result the program keeps (LSB first): fused fixed-point
+    multiplies keep ``n`` of the ``2n`` product planes, and DCE then deletes
+    the gates that only fed the dropped half."""
+
+    op: str
+    args: tuple[int, ...]
+    out: int
+    width: int
 
 
-def record_op(op: str, nbits: int = 32) -> ScheduleIR:
-    """Record an ``aritpim._OP_TABLE`` builder into SSA IR (NOR basis)."""
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """A multi-op PIM program: the unit ``compile_program`` compiles.
+
+    The per-op netlists are recorded into **one** SSA program — the output
+    values of one op are wired directly into the next, so intermediate
+    planes never round-trip through HBM, and fold/cse/fuse/dce and the
+    liveness allocator all operate across op boundaries.  Built by the
+    ``repro.pim`` tracer; ``Program.single`` wraps one table op (what
+    ``compile_op`` compiles).
+    """
+
+    in_widths: tuple[int, ...]
+    body: tuple[ProgramOp, ...]
+    outputs: tuple[int, ...]
+    name: str = "program"
+    in_names: tuple[str, ...] | None = None
+    out_names: tuple[str, ...] | None = None
+
+    def input_names(self) -> tuple[str, ...]:
+        """Slot names, chosen so sorted order == declaration order (the
+        backend stacking contract); the 2-digit padding bounds programs at
+        100 inputs — refuse loudly rather than scramble slots past it."""
+        if self.in_names is not None:
+            return self.in_names
+        assert len(self.in_widths) <= 100, (
+            "programs are limited to 100 inputs (zero-padded slot names)")
+        return tuple(f"in{i:02d}" for i in range(len(self.in_widths)))
+
+    def output_names(self) -> tuple[str, ...]:
+        if self.out_names is not None:
+            return self.out_names
+        return tuple(f"out{j:02d}" for j in range(len(self.outputs)))
+
+    @property
+    def key(self) -> str:
+        """Structural cache key: two traces of the same computation share
+        one compilation regardless of the function name they came from."""
+        ins = ",".join(map(str, self.in_widths))
+        body = ";".join(
+            f"{n.op}({','.join(map(str, n.args))})->v{n.out}:{n.width}"
+            for n in self.body
+        )
+        outs = ",".join(f"v{v}" for v in self.outputs)
+        names = ""
+        if self.in_names is not None or self.out_names is not None:
+            names = f"|names:{self.input_names()}|{self.output_names()}"
+        return f"in:{ins}|{body}|out:{outs}{names}"
+
+    @classmethod
+    def single(cls, op: str, nbits: int = 32) -> "Program":
+        """The one-op program ``compile_op`` is a special case of.  Keeps the
+        legacy ``a``/``b``/``out`` slot names and the full builder width."""
+        from . import aritpim
+
+        spec = aritpim._OP_TABLE[op]
+        wa, wb = spec.in_widths(nbits)
+        return cls(
+            in_widths=(wa, wb),
+            body=(ProgramOp(op, (0, 1), 2, spec.out_width(nbits)),),
+            outputs=(2,),
+            name=f"{op}/{nbits}",
+            in_names=("a", "b"),
+            out_names=("out",),
+        )
+
+
+def record_program(program: Program) -> ScheduleIR:
+    """Record a multi-op program into one SSA IR (NOR basis): per-op
+    netlists are stitched value-to-value in a single ``PlaneVM``, so the
+    record-mode NOT cache, constants and all downstream passes already see
+    across op boundaries."""
     from . import aritpim
     from .machine import PlaneVM
 
-    spec = aritpim._OP_TABLE[op]
-    wa, wb = spec.in_widths(nbits)
     vm = PlaneVM(mode="record")
-    A = [vm.input_plane() for _ in range(wa)]
-    B = [vm.input_plane() for _ in range(wb)]
-    out = spec.builder(vm, A, B)
-    ir = from_schedule(vm.finish_schedule({"a": A, "b": B}, {"out": out}))
+    env: dict[int, list] = {}
+    inputs: dict[str, list[int]] = {}
+    for i, (name, w) in enumerate(zip(program.input_names(), program.in_widths)):
+        env[i] = [vm.input_plane() for _ in range(w)]
+        inputs[name] = env[i]
+    for node in program.body:
+        spec = aritpim._OP_TABLE[node.op]
+        out = list(spec.builder(vm, *[env[a] for a in node.args]))
+        assert len(out) >= node.width, (node.op, len(out), node.width)
+        env[node.out] = out[: node.width]
+    outputs = {
+        name: env[v] for name, v in zip(program.output_names(), program.outputs)
+    }
+    ir = from_schedule(vm.finish_schedule(inputs, outputs))
     ir.meta.update(
-        op=op, nbits=nbits, recorded_len=ir.num_gates, recorded_gates=vm.gates
+        program=program.key, name=program.name,
+        recorded_len=ir.num_gates, recorded_gates=vm.gates,
     )
     return ir
 
 
-def compile_op(
-    op: str,
-    nbits: int = 32,
+def record_op(op: str, nbits: int = 32) -> ScheduleIR:
+    """Record an ``aritpim._OP_TABLE`` builder into SSA IR (NOR basis) —
+    the one-op special case of :func:`record_program`."""
+    ir = record_program(Program.single(op, nbits))
+    ir.meta.update(op=op, nbits=nbits)
+    return ir
+
+
+# ---------------------------------------------------------------------------
+# Compilation cache: (program, basis, pass_list) → CompiledSchedule
+# ---------------------------------------------------------------------------
+
+_COMPILE_CACHE: dict[
+    tuple[str, str, tuple[str, ...]], CompiledSchedule
+] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def cache_stats() -> dict[str, int]:
+    """Compile-cache hit/miss counters (reported by ``benchmarks.smoke`` so
+    cache regressions are visible in CI logs)."""
+    return dict(_CACHE_STATS)
+
+
+def compile_program(
+    program: Program,
     passes: tuple[str, ...] = DEFAULT_PASSES,
     basis: str | LogicBasis = "memristive",
 ) -> CompiledSchedule:
-    """Record → basis-lower → optimize → allocate, cached by
-    ``(op, nbits, basis, pass_list)``.
+    """Record → basis-lower → optimize → allocate a multi-op program, cached
+    by ``(program, basis, pass_list)``.
 
-    The column-budget baseline is the *basis-lowered* schedule allocated with
+    The column-budget baseline is the *basis-lowered* program allocated with
     no optimization passes, so the CSE window ladder compares like with like
     on both bases."""
     basis = get_basis(basis)
     passes = tuple(passes)
-    cache_key = (op, nbits, basis.name, passes)
+    cache_key = (program.key, basis.name, passes)
     hit = _COMPILE_CACHE.get(cache_key)
     if hit is not None:
+        _CACHE_STATS["hits"] += 1
         return hit
-    recorded = record_op(op, nbits)
+    _CACHE_STATS["misses"] += 1
+    recorded = record_program(program)
     if basis.name == "dram":
         recorded = lower_to_dram(recorded)
         recorded.meta["prepass_gates"] = recorded.gate_count(basis)
         recorded.meta["prepass_len"] = recorded.num_gates
     baseline_cols = lower(recorded, basis=basis).num_cols
-    key = f"{op}/{nbits}/{basis.name}/{'+'.join(passes) if passes else 'raw'}"
+    # The schedule key must be unique per *structure* (it names jit-static
+    # slot maps in the Pallas registry); the human-readable program name
+    # alone could collide across different traced lambdas.
+    digest = hashlib.sha1(program.key.encode()).hexdigest()[:8]
+    key = (f"{program.name}@{digest}/{basis.name}/"
+           f"{'+'.join(passes) if passes else 'raw'}")
     compiled = None
     for window in CSE_WINDOW_LADDER if "cse" in passes else (None,):
         optimized = run_passes(recorded, passes, cse_window=window)
@@ -751,6 +880,17 @@ def compile_op(
     compiled.meta["baseline_cols"] = baseline_cols
     _COMPILE_CACHE[cache_key] = compiled
     return compiled
+
+
+def compile_op(
+    op: str,
+    nbits: int = 32,
+    passes: tuple[str, ...] = DEFAULT_PASSES,
+    basis: str | LogicBasis = "memristive",
+) -> CompiledSchedule:
+    """Compile one ``_OP_TABLE`` op — the single-op special case of
+    :func:`compile_program`, sharing its cache on both bases."""
+    return compile_program(Program.single(op, nbits), passes, basis)
 
 
 # ---------------------------------------------------------------------------
@@ -780,6 +920,15 @@ class CostReport:
     not_gates: int = 0  # dram basis: NOT rows (DCC activations)
     peak_rows: int = 0  # num_cols + the basis' reserved compute rows
     copy_aaps: int = 0  # dram basis: operand/result AAP copies
+    hbm_planes_in: int = 0  # input bit-planes crossing the array boundary
+    hbm_planes_out: int = 0  # output bit-planes crossing the array boundary
+
+    @property
+    def hbm_planes(self) -> int:
+        """Total bit-planes moved between HBM and the arrays per dispatch —
+        the in-memory metric multi-op fusion shrinks: a fused program moves
+        only its true inputs/outputs, never the intermediate planes."""
+        return self.hbm_planes_in + self.hbm_planes_out
 
 
 @dataclasses.dataclass
@@ -818,6 +967,8 @@ class Backend:
             not_gates=compiled.not_gates,
             peak_rows=compiled.peak_rows,
             copy_aaps=int(compiled.meta.get("copy_aaps", 0)),
+            hbm_planes_in=len(compiled.input_slots),
+            hbm_planes_out=len(compiled.output_slots),
         )
 
 
@@ -897,6 +1048,13 @@ def op_cost(op: str, nbits: int = 32,
             passes: tuple[str, ...] = DEFAULT_PASSES,
             basis: str | LogicBasis = "memristive") -> CostReport:
     return get_backend("cost").run(compile_op(op, nbits, passes, basis)).cost
+
+
+def program_cost(program: Program,
+                 passes: tuple[str, ...] = DEFAULT_PASSES,
+                 basis: str | LogicBasis = "memristive") -> CostReport:
+    """Program-level analytical cost (the multi-op analogue of ``op_cost``)."""
+    return get_backend("cost").run(compile_program(program, passes, basis)).cost
 
 
 def netlist_gate_counts(nbits: int = 32) -> dict[str, int]:

@@ -194,6 +194,43 @@ def float_div(x, y):
     return res, _op_cost("float32_div", "float_div", 32)
 
 
+# ------------------------------------------------- fused multi-op programs
+
+
+@functools.lru_cache(maxsize=None)
+def _mac_program(dtype):
+    """The fused ``a * b + c`` program at a PimType (traced once per type;
+    compilations are cached downstream by structure)."""
+    import repro.pim as pim
+
+    return pim.trace(lambda a, b, c: a * b + c, dtype)
+
+
+def mac_cost(dtype=None, basis: str = "memristive",
+             passes: tuple[str, ...] | None = None) -> "ir.CostReport":
+    """Program-level CostReport of the fused MAC (``a*b + c``) — the
+    flagship composed program: one compiled schedule, intermediates never
+    leave the array (compare ``hbm_planes`` with separate mul+add
+    dispatches).  ``dtype`` is a ``bitplanes.PimType`` (default float32)."""
+    from . import bitplanes
+
+    return _mac_program(dtype or bitplanes.F32).cost(
+        basis=basis, passes=ir.DEFAULT_PASSES if passes is None else passes)
+
+
+def float_mac(x, y, c):
+    """Fused float32 ``x*y + c``: execute-mode bit-exact oracle (per-op IEEE
+    rounding, like the compiled program) + the fused program's CostReport."""
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    n = x.shape[0]
+    vm = PlaneVM(mode="execute", n_words=bitplanes.num_words(n))
+    P = aritpim.float_mul(vm, bitplanes.f32_to_planes(x), bitplanes.f32_to_planes(y))
+    S = aritpim.float_add(vm, P, bitplanes.f32_to_planes(c))
+    return bitplanes.planes_to_f32(S, n), mac_cost()
+
+
 # Jitted variants (value path only; costs are static per op).
 fixed_add_jit = jax.jit(lambda x, y: fixed_add(x, y)[0])
 float_add_jit = jax.jit(lambda x, y: float_add(x, y)[0])

@@ -1,88 +1,87 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd public wrappers — thin aliases over the ``repro.pim`` frontend.
 
-``pim_float_add/pim_float_mul/pim_bf16_add/pim_bf16_mul/pim_fixed_add`` run
-schedules compiled by the ``repro.core.ir`` pipeline (record → optimization
-passes → liveness column allocation) through the ``pallas`` executor backend
-(interpret mode on CPU; compiled on a real TPU) and convert packed bit-planes
-back to ordinary arrays.  ``pim_matmul`` is the MatPIM-schedule blocked
-matmul.  Everything pulls from the one compile cache keyed by
-``(op, nbits, basis, pass_list)`` — adding an op here is a registration, not
-a new code path, and every wrapper takes ``basis="memristive"|"dram"`` to
-execute the NOR or the MAJ3/NOT lowering of the same netlist.
+Every ``pim_*`` arithmetic wrapper is now a one-line alias over a traced
+``repro.pim`` program: the frontend packs planes via the
+``bitplanes.PimType`` layouts, compiles through the one ``repro.core.ir``
+cache (single-op traces canonicalize to the same cache entries as
+``ir.compile_op``) and executes on the ``pallas`` backend (interpret mode on
+CPU; compiled on a real TPU).  Adding a wrapper is a registration, not a new
+code path, and every wrapper takes ``basis="memristive"|"dram"`` to execute
+the NOR or the MAJ3/NOT lowering of the same netlist.  ``pim_matmul`` is
+the MatPIM-schedule blocked matmul.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
+import functools
 
-from repro.core import bitplanes, ir
+import repro.pim as pim
 
 from . import pim_matmul
 
+_ARITH_FNS = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+    "div": lambda a, b: a / b,
+}
 
-def _run_planes(op: str, nbits: int, planes: jnp.ndarray, interpret: bool,
-                basis: str = "memristive") -> jnp.ndarray:
-    compiled = ir.compile_op(op, nbits=nbits, basis=basis)  # memoized in ir's cache
-    return ir.get_backend("pallas").run(compiled, planes, interpret=interpret).planes
 
-
-def _binary_f32(opname: str, x, y, interpret: bool = True, basis: str = "memristive"):
-    x = jnp.asarray(x, jnp.float32)
-    y = jnp.asarray(y, jnp.float32)
-    n = x.shape[0]
-    planes = jnp.stack(bitplanes.f32_to_planes(x) + bitplanes.f32_to_planes(y))
-    out = _run_planes(opname, 32, planes, interpret, basis)
-    return bitplanes.planes_to_f32([out[i] for i in range(32)], n)
+@functools.lru_cache(maxsize=None)
+def _fn(arith: str, dtype_name: str, nbits: int) -> pim.CompiledPimFunction:
+    dtype = {"f32": pim.f32, "bf16": pim.bf16}.get(dtype_name) or pim.fixed(nbits)
+    return pim.compile(_ARITH_FNS[arith], dtype=dtype, backend="pallas")
 
 
 def pim_float_add(x, y, interpret: bool = True, basis: str = "memristive"):
-    return _binary_f32("float_add", x, y, interpret, basis)
+    return _fn("add", "f32", 32)(x, y, interpret=interpret, basis=basis)
+
+
+def pim_float_sub(x, y, interpret: bool = True, basis: str = "memristive"):
+    return _fn("sub", "f32", 32)(x, y, interpret=interpret, basis=basis)
 
 
 def pim_float_mul(x, y, interpret: bool = True, basis: str = "memristive"):
-    return _binary_f32("float_mul", x, y, interpret, basis)
+    return _fn("mul", "f32", 32)(x, y, interpret=interpret, basis=basis)
 
 
-def _binary_bf16(opname: str, x, y, interpret: bool = True, basis: str = "memristive"):
-    x = jnp.asarray(x, jnp.bfloat16)
-    y = jnp.asarray(y, jnp.bfloat16)
-    n = x.shape[0]
-    planes = jnp.stack(bitplanes.bf16_to_planes(x) + bitplanes.bf16_to_planes(y))
-    out = _run_planes(opname, 16, planes, interpret, basis)
-    return bitplanes.planes_to_bf16([out[i] for i in range(16)], n)
+def pim_float_div(x, y, interpret: bool = True, basis: str = "memristive"):
+    return _fn("div", "f32", 32)(x, y, interpret=interpret, basis=basis)
 
 
 def pim_bf16_add(x, y, interpret: bool = True, basis: str = "memristive"):
-    return _binary_bf16("bf16_add", x, y, interpret, basis)
+    return _fn("add", "bf16", 16)(x, y, interpret=interpret, basis=basis)
+
+
+def pim_bf16_sub(x, y, interpret: bool = True, basis: str = "memristive"):
+    return _fn("sub", "bf16", 16)(x, y, interpret=interpret, basis=basis)
 
 
 def pim_bf16_mul(x, y, interpret: bool = True, basis: str = "memristive"):
-    return _binary_bf16("bf16_mul", x, y, interpret, basis)
+    return _fn("mul", "bf16", 16)(x, y, interpret=interpret, basis=basis)
 
 
 def pim_fixed_add(x, y, nbits: int = 32, interpret: bool = True,
                   basis: str = "memristive"):
-    x = jnp.asarray(x)
-    y = jnp.asarray(y)
-    n = x.shape[0]
-    planes = jnp.stack(
-        bitplanes.int_to_planes(x, nbits) + bitplanes.int_to_planes(y, nbits)
-    )
-    out = _run_planes("fixed_add", nbits, planes, interpret, basis)
-    return bitplanes.planes_to_int([out[i] for i in range(nbits)], n, signed=True)
+    return _fn("add", "fixed", nbits)(x, y, interpret=interpret, basis=basis)
+
+
+def pim_fixed_sub(x, y, nbits: int = 32, interpret: bool = True,
+                  basis: str = "memristive"):
+    return _fn("sub", "fixed", nbits)(x, y, interpret=interpret, basis=basis)
 
 
 def pim_fixed_mul(x, y, nbits: int = 32, interpret: bool = True,
                   basis: str = "memristive"):
     """Signed N×N multiply; returns the low N bits (wrapping, like int mul)."""
-    x = jnp.asarray(x)
-    y = jnp.asarray(y)
-    n = x.shape[0]
-    planes = jnp.stack(
-        bitplanes.int_to_planes(x, nbits) + bitplanes.int_to_planes(y, nbits)
-    )
-    out = _run_planes("fixed_mul", nbits, planes, interpret, basis)
-    return bitplanes.planes_to_int([out[i] for i in range(nbits)], n, signed=True)
+    return _fn("mul", "fixed", nbits)(x, y, interpret=interpret, basis=basis)
+
+
+def pim_fixed_div(x, y, nbits: int = 32, interpret: bool = True,
+                  basis: str = "memristive"):
+    """Signed division (C truncation semantics); x//0 is the netlist's
+    documented all-ones convention."""
+    return _fn("div", "fixed", nbits)(x, y, interpret=interpret, basis=basis)
 
 
 def pim_matmul_op(a, b, *, bm=128, bk=128, bn=128, interpret: bool = True):
@@ -91,5 +90,7 @@ def pim_matmul_op(a, b, *, bm=128, bk=128, bn=128, interpret: bool = True):
 
 def schedule_info(opname: str, nbits: int = 32, basis: str = "memristive"):
     """(recorded schedule length, allocated columns) — benchmarks/tests."""
+    from repro.core import ir
+
     compiled = ir.compile_op(opname, nbits=nbits, basis=basis)
     return compiled.recorded_len, compiled.num_cols

@@ -5,9 +5,13 @@ crossbar column over R rows becomes a lane-packed ``uint32`` bit-plane of
 ``R/32`` words; the serial gate schedule becomes a sequence of bitwise VPU
 ops over VMEM-resident planes.  The ``fori_loop`` dispatch executes both
 logic bases — memristive NOR rows and the DRAM basis' MAJ3/NOT rows — so one
-kernel serves every ``(op, nbits, basis, passes)`` compile.  HBM traffic is
-2 input planes read + 1 output plane written per element bit — independent
-of schedule length, exactly the in-memory property the paper models.
+kernel serves every ``(program, basis, passes)`` compile, including fused
+multi-op programs from the ``repro.pim`` frontend: the static input/output
+slot maps carry however many named operands/results the program declares.
+HBM traffic is exactly the program's boundary planes (inputs read + outputs
+written; ``CostReport.hbm_planes``) — independent of schedule length, and
+intermediate values of a fused program never leave VMEM, exactly the
+in-memory property the paper models.
 
 The kernel is the ``pallas`` executor backend of the compiler pipeline
 (DESIGN.md §3–4): it consumes an optimized ``ir.CompiledSchedule`` whose

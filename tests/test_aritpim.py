@@ -14,7 +14,7 @@ except ImportError:
     from _hyp import given, settings, st
 
 from repro.core import aritpim, bitplanes, simulate
-from repro.core.machine import PlaneVM, compress_schedule, execute_schedule
+from repro.core.machine import PlaneVM, execute_schedule
 
 np.seterr(all="ignore")
 
