@@ -1,0 +1,95 @@
+"""Executor-mode shootout: wave-scheduled straight-line vs fori_loop.
+
+Races the ``pallas-unrolled`` kernel against the ``pallas-loop`` kernel (and
+the ``interpreter`` scan oracle) on fused MAC programs, reporting per mode
+the schedule shape the compiler produced — gates, peak columns after the
+``reorder`` pass, dependency waves (``parallel_cycles``) — next to measured
+wall time per dispatch.  This is the CI perf gate: ``benchmarks/smoke.py``
+fails if the unrolled kernel is not faster than the loop kernel on the f32
+fused MAC, and ``benchmarks/run.py --json BENCH_exec.json`` emits the rows
+as JSON so the perf trajectory is trackable across commits.
+
+The first unrolled dispatch pays the straight-line XLA compile (tens of
+seconds for the 13k-gate f32 MAC — the schedule splits into
+``UNROLL_SEGMENT_GATES`` kernels); ``us_per_call`` times the steady state,
+which is what a benchmarking sweep runs thousands of times.
+
+Measurement caveat, CPU interpret mode: ``pallas-loop`` runs under
+``pallas_call``'s interpret emulation while the unrolled body runs as a
+plain jit (DESIGN.md §5).  The ``interpreter`` row is the emulation-free
+loop baseline — a plain ``lax.scan`` of the same per-gate dispatch — and
+lands within a few percent of ``pallas-loop``, so the unrolled win is the
+straight-line kernel structure (no dynamic indexing / opcode select), not
+the emulation layer.  Hardware (interpret=False) numbers are a separate
+exercise on a real TPU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.pim as pim
+from repro.core import ir
+
+from .common import run_cli, time_fn
+
+N_ELEMS = 4096
+
+_MODES = ("interpreter", "pallas-loop", "pallas-unrolled")
+
+# dtype rows: f32 is the CI-gated case; int8 shows the auto threshold
+# picking `unrolled` on its own.
+_CASES = {"f32_mac": pim.f32, "int8_mac": pim.int8}
+
+
+def _planes(mac, dtype, rng):
+    if dtype.kind == "fixed":
+        lo, hi = -(2 ** (dtype.nbits - 1)), 2 ** (dtype.nbits - 1)
+        arrays = [jnp.asarray(rng.integers(lo, hi, N_ELEMS).astype(np.int32))
+                  for _ in range(3)]
+    else:
+        arrays = [jnp.asarray(rng.standard_normal(N_ELEMS).astype(np.float32))
+                  for _ in range(3)]
+    return jnp.stack([p for t, x in zip(mac.in_types, arrays)
+                      for p in t.to_planes(t.cast(x))])
+
+
+def run(bases: tuple[str, ...] = ("memristive",),
+        passes: tuple[str, ...] | None = None) -> list[dict]:
+    from repro.kernels import pim_bitserial
+
+    passes = ir.DEFAULT_PASSES if passes is None else passes
+    rng = np.random.default_rng(0)
+    rows = []
+    for name, dtype in _CASES.items():
+        mac = pim.compile(lambda a, b, c: a * b + c, dtype=dtype)
+        # Time the executor dispatch alone, on pre-packed planes — plane
+        # pack/unpack is shared by every mode and would otherwise drown the
+        # kernel difference.
+        planes = _planes(mac, dtype, rng)
+        for basis in bases:
+            compiled = mac.compiled(basis=basis, passes=passes)
+            for mode in _MODES:
+                backend = ir.get_backend(mode)
+                us = time_fn(
+                    lambda backend=backend, c=compiled:
+                        backend.run(c, planes).planes,
+                    warmup=1, iters=3)
+                rows.append({
+                    "name": f"exec/{name}/{basis}/{mode}",
+                    "us_per_call": f"{us:.0f}",
+                    "gates": compiled.num_gates,
+                    "num_cols": compiled.num_cols,
+                    "waves": compiled.num_waves,
+                    "auto_mode": pim_bitserial.resolve_mode(compiled),
+                })
+    return rows
+
+
+def main():
+    run_cli(run)
+
+
+if __name__ == "__main__":
+    main()

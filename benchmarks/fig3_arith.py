@@ -84,18 +84,26 @@ def run(bases: tuple[str, ...] = BASES,
         ours = rep.recorded_gates
         paper = PAPER_GATE_COUNTS.get(op)  # None for ops with no Fig-3 reference
         bytes_per_op = 3 * (nbits // 8)  # 2 reads + 1 write
+        # the same pipeline minus the pressure scheduler, to show its win
+        unsched = tuple(p for p in passes if p != "reorder")
+        rep_unsched = ir.op_cost(ir_key, nbits, unsched)
         row = {
             "name": f"fig3/{op}",
             "us_per_call": f"{us:.0f}",
             "gates_recorded": ours,
             "gates_optimized": rep.gates,  # post-pipeline (≤ recorded)
             "cols_peak": rep.num_cols,  # ≤ the 1024-column crossbar budget
+            "cols_peak_unsched": rep_unsched.num_cols,  # without `reorder`
+            "parallel_cycles": rep.parallel_cycles,  # dependency waves
             "gates_paper": paper if paper is not None else "n/a",
         }
         if "memristive" in bases:
             row.update({
                 "memristive_tops_ours": f"{MEMRISTIVE_PIM.op_throughput(ours)/1e12:.2f}",
                 "memristive_tops_optimized": f"{MEMRISTIVE_PIM.op_throughput(rep.gates)/1e12:.2f}",
+                # upper bound if every dependency wave fired in one cycle
+                "memristive_tops_parallel":
+                    f"{MEMRISTIVE_PIM.report_parallel_throughput(rep)/1e12:.2f}",
                 "memristive_tops_paper_model": (
                     f"{MEMRISTIVE_PIM.op_throughput(paper)/1e12:.2f}"
                     if paper is not None else "n/a"

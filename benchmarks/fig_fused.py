@@ -79,8 +79,10 @@ def run(bases: tuple[str, ...] = BASES,
             "hbm_bytes_fused":
                 f"{MEMRISTIVE_PIM.report_hbm_bytes(fused_mem, N_ELEMS):.0f}",
         }
+        unsched = tuple(p for p in passes if p != "reorder")
         for basis in bases:
             fused = mac.cost(basis=basis, passes=passes)
+            fused_unsched = mac.cost(basis=basis, passes=unsched)
             seps = [sep_mul.cost(basis=basis, passes=passes),
                     sep_add.cost(basis=basis, passes=passes)]
             cfg = _CONFIGS[basis]
@@ -89,7 +91,9 @@ def run(bases: tuple[str, ...] = BASES,
                 f"{basis}_gates_separate": sum(r.gates for r in seps),
                 f"{basis}_cycles_fused": fused.cycles,
                 f"{basis}_cycles_separate": sum(r.cycles for r in seps),
+                f"{basis}_parallel_cycles_fused": fused.parallel_cycles,
                 f"{basis}_peak_cols_fused": fused.num_cols,
+                f"{basis}_peak_cols_unsched": fused_unsched.num_cols,
                 f"{basis}_peak_rows_fused": fused.peak_rows,
                 f"{basis}_hbm_planes_fused": fused.hbm_planes,
                 f"{basis}_hbm_planes_separate": sum(r.hbm_planes for r in seps),

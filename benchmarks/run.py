@@ -8,16 +8,48 @@
   fig7_cnn_train  — §5 CNN training
   roofline_table  — deliverable (g): per-cell three-term roofline + Fig-8 verdicts
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV.  The executor-mode shootout
+(``exec_modes``, unrolled vs fori_loop) is not part of the default sweep —
+its straight-line compile is expensive; run it via ``--json PATH`` (which
+runs only that benchmark and writes its rows as JSON, the
+``BENCH_exec.json`` perf-trajectory artifact checked by CI), via
+``python -m benchmarks.exec_modes``, or via ``benchmarks.smoke``.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
 
-def main() -> None:
+def write_exec_json(path: str) -> list[dict]:
+    """Run the executor-mode benchmark and write its rows to ``path``."""
+    from . import exec_modes
+    from .common import emit
+
+    rows = exec_modes.run()
+    with open(path, "w") as f:
+        json.dump({"benchmark": "exec_modes", "rows": rows}, f, indent=2,
+                  sort_keys=True)
+        f.write("\n")
+    emit([dict(r) for r in rows])
+    return rows
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description="ConvPIM benchmark harness")
+    parser.add_argument(
+        "--json", metavar="BENCH_exec.json", default=None,
+        help="run only the executor-mode benchmark and write its rows "
+             "(gates, num_cols, waves, us per executor mode) as JSON")
+    args = parser.parse_args(argv)
+
+    if args.json is not None:
+        write_exec_json(args.json)
+        return
+
     from . import (fig3_arith, fig4_cc, fig5_matmul, fig6_cnn_infer,
                    fig7_cnn_train, fig_fused, roofline_table)
     from .common import emit

@@ -8,8 +8,14 @@ particular performance number.  The compile-cache hit/miss counters are
 printed at the end so cache regressions (e.g. a wrapper recompiling what
 ``compile_op`` already built) are visible in CI logs.
 
+One performance number *is* asserted: the executor-mode benchmark
+(``exec_modes``, emitted to ``BENCH_exec.json``) must show the
+``pallas-unrolled`` wave-scheduled kernel beating the ``pallas-loop``
+fori_loop kernel on the f32 fused MAC — the perf trajectory this PR seeds.
+
 Usage: ``PYTHONPATH=src python -m benchmarks.smoke``  (exits non-zero on any
-exception, empty table, or row with missing values).
+exception, empty table, row with missing values, or executor perf
+regression).
 """
 
 from __future__ import annotations
@@ -23,7 +29,8 @@ from . import fig3_arith, fig4_cc, fig5_matmul, fig_fused
 # Columns every row of each table must carry a non-empty value for.
 _REQUIRED = {
     "fig3_arith": ("gates_recorded", "dram_maj_gates", "dram_cycles",
-                   "dram_peak_rows", "memristive_tops_ours", "dram_tops_ours"),
+                   "dram_peak_rows", "memristive_tops_ours", "dram_tops_ours",
+                   "parallel_cycles", "cols_peak_unsched"),
     "fig4_cc": ("cc", "pim_tops", "dram_cycles", "improvement_vs_gpu_membound"),
     "fig5_matmul": ("reuse_flops_per_byte", "pim_pairs_per_s",
                     "memristive_fusedmac_pairs_per_s", "dram_fusedmac_pairs_per_s",
@@ -31,7 +38,8 @@ _REQUIRED = {
     "fig_fused": ("memristive_gates_fused", "memristive_gates_separate",
                   "memristive_hbm_planes_fused", "dram_cycles_fused",
                   "dram_hbm_planes_separate", "memristive_macs_per_s",
-                  "hbm_bytes_fused"),
+                  "hbm_bytes_fused", "memristive_parallel_cycles_fused",
+                  "memristive_peak_cols_unsched"),
 }
 
 
@@ -45,14 +53,31 @@ def check(name: str, rows: list[dict]) -> None:
     print(f"smoke: {name} ok ({len(rows)} rows)", file=sys.stderr)
 
 
+def check_exec(rows: list[dict]) -> None:
+    """The unrolled kernel must beat the fori_loop kernel on the f32 MAC."""
+    us = {r["name"]: float(r["us_per_call"]) for r in rows}
+    loop = us.get("exec/f32_mac/memristive/pallas-loop")
+    unrolled = us.get("exec/f32_mac/memristive/pallas-unrolled")
+    if loop is None or unrolled is None:
+        raise SystemExit("smoke: exec_modes is missing the f32 MAC rows")
+    if unrolled >= loop:
+        raise SystemExit(
+            f"smoke: pallas-unrolled ({unrolled:.0f}us) is not faster than "
+            f"the fori_loop kernel ({loop:.0f}us) on the f32 fused MAC")
+    print(f"smoke: exec ok (f32 MAC unrolled {unrolled:.0f}us vs "
+          f"loop {loop:.0f}us, {loop / unrolled:.1f}x)", file=sys.stderr)
+
+
 def main() -> None:
     from .common import emit
+    from .run import write_exec_json
 
     for name, mod in (("fig3_arith", fig3_arith), ("fig4_cc", fig4_cc),
                       ("fig_fused", fig_fused), ("fig5_matmul", fig5_matmul)):
         rows = mod.run()
         check(name, rows)
         emit(rows)
+    check_exec(write_exec_json("BENCH_exec.json"))
     stats = ir.cache_stats()
     print(f"smoke: compile cache hits={stats['hits']} misses={stats['misses']}",
           file=sys.stderr)

@@ -80,7 +80,7 @@ class ModelConfig:
     # over the model axis (the right scheme for small models at prefill —
     # see EXPERIMENTS.md §Perf cell B)
     shard_mode: str = "tp"
-    # which shape cells this arch supports (DESIGN.md §5)
+    # which shape cells this arch supports (DESIGN.md §6)
     supports_long_context: bool = False
 
     # ------------------------------------------------------------ derived

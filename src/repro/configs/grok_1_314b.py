@@ -1,7 +1,7 @@
 """grok-1-314b [moe]: 64L d=6144 48H (GQA kv=8) ff=32768 v=131072;
 8 experts top-2.  [hf:xai-org/grok-1; unverified]
 EP note: 8 experts < 16-way model axis → expert weights shard d_ff
-(moe_shard_mode="ffn"); memory plan requires FSDP (DESIGN.md §6).
+(moe_shard_mode="ffn"); memory plan requires FSDP (DESIGN.md §7).
 long_500k: SKIP — full attention."""
 
 import dataclasses

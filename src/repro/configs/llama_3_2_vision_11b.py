@@ -6,7 +6,7 @@ is a stub — input_specs() supplies precomputed patch embeddings
 [hf:meta-llama/Llama-3.2-11B-Vision; unverified]
 TP note: 32H/16-way model axis = 2 heads/shard (exact); kv=8 < 16 → GSPMD
 replica-pads KV heads (documented waste, see EXPERIMENTS.md §Perf).
-long_500k: SKIP — full attention (DESIGN.md §5)."""
+long_500k: SKIP — full attention (DESIGN.md §6)."""
 
 import dataclasses
 from .base import ModelConfig

@@ -1,7 +1,7 @@
 """Architecture registry: the 10 assigned configs + reduced smoke variants.
 
 Exact dims from the assignment brief; per-arch notes record TP divisibility
-and long-context applicability (DESIGN.md §5)."""
+and long-context applicability (DESIGN.md §6)."""
 
 from __future__ import annotations
 

@@ -77,6 +77,13 @@ class PIMConfig:
         per-basis command cycles."""
         return self.op_throughput_cycles(report.cycles)
 
+    def report_parallel_throughput(self, report) -> float:
+        """Vectored dispatches/second if every dependency wave of the gate
+        DAG fired in one command cycle (``CostReport.parallel_cycles`` =
+        ``num_waves``) — the intra-array gate-parallelism bound the serial
+        cycle count is compared against."""
+        return self.op_throughput_cycles(max(report.parallel_cycles, 1))
+
     def report_hbm_bytes(self, report, n_elems: int) -> float:
         """HBM bytes one vectored dispatch moves: the report's boundary
         bit-planes × the packed plane size.  The metric multi-op fusion

@@ -31,10 +31,18 @@ allocator all fire across op boundaries.  ``compile_op`` is the one-op
 special case (``Program.single``), sharing the same cache.  Programs are
 built by the ``repro.pim`` trace-and-compile frontend.
 
+Beyond the rewrite passes, two *scheduling* passes reorder gates without
+changing the DAG: ``levelize`` partitions the program into dependency waves
+(mutually independent gates — the paper's intra-array parallelism metric,
+``CostReport.parallel_cycles``) and ``reorder`` is a register-pressure-aware
+list scheduler that shortens live ranges before the linear-scan allocator,
+cutting ``num_cols``/``peak_rows`` (never increasing them — DESIGN.md §5).
+
 Executor backends share one interface (``Backend.run``) and live in a
-registry: ``interpreter`` (pure-jnp scan), ``pallas`` (the TPU kernel in
-``repro.kernels.pim_bitserial``, registered lazily) and ``cost`` (analytical
-gate/cycle model — no data movement at all).  Compiled schedules are cached
+registry: ``interpreter`` (pure-jnp scan), ``pallas`` / ``pallas-unrolled``
+/ ``pallas-loop`` (the TPU kernels in ``repro.kernels.pim_bitserial``,
+registered lazily) and ``cost`` (analytical gate/cycle model — no data
+movement at all).  Compiled schedules are cached
 by ``(program, basis, pass_list)`` so every consumer (``kernels.ops``,
 ``core.simulate``, ``core.analyzer``, benchmarks) pulls from one path.
 
@@ -351,6 +359,139 @@ def dead_gate_elim(ir: ScheduleIR) -> ScheduleIR:
 
 
 # ---------------------------------------------------------------------------
+# Gate scheduling: dependency waves + register-pressure-aware reordering
+# ---------------------------------------------------------------------------
+
+
+def _gate_rows(ir: ScheduleIR) -> list[tuple[int, int, int, int, int]]:
+    return [tuple(int(x) for x in row) for row in ir.ops]
+
+
+def _dataflow_waves(gates) -> list[int]:
+    """1-based dependency wave per gate: ``wave = 1 + max(operand waves)``.
+
+    Gates in the same wave are mutually independent, so a machine that can
+    fire every array column-op concurrently finishes the schedule in
+    ``max(waves)`` steps — the paper's intra-array gate-parallelism bound
+    (``CostReport.parallel_cycles``).  Inputs sit at wave 0.  The metric is
+    a DAG property: reordering passes never change it.
+    """
+    wave_of: dict[int, int] = {}
+    waves = []
+    for op, a, b, c, out in gates:
+        w = 1 + max((wave_of.get(v, 0) for v in _row_operands(op, a, b, c)),
+                    default=0)
+        wave_of[out] = w
+        waves.append(w)
+    return waves
+
+
+def levelize(ir: ScheduleIR) -> ScheduleIR:
+    """Partition the SSA gate DAG into dependency waves and reorder the
+    schedule wave-major (stable within a wave).
+
+    The wave count is the paper's intra-array parallelism metric — it flows
+    to ``CostReport.parallel_cycles`` — and wave-major order groups mutually
+    independent gates contiguously, which is the layout the unrolled Pallas
+    executor's read-then-write chunks like best.  Topological order is
+    preserved by construction: every operand's wave is strictly smaller
+    than its gate's wave.
+    """
+    gates = _gate_rows(ir)
+    waves = _dataflow_waves(gates)
+    order = sorted(range(len(gates)), key=lambda g: (waves[g], g))
+    out = _finish(ir, [gates[g] for g in order], {}, "levelize")
+    out.meta["num_waves"] = max(waves, default=0)
+    return out
+
+
+def _peak_live(gates, input_ids, protected) -> int:
+    """Peak simultaneously-live values for a gate order — exactly the
+    ``num_cols`` the linear-scan allocator in :func:`lower` will produce
+    (inputs allocated up front, outputs pinned, operands freed after their
+    last use)."""
+    last_use: dict[int, int] = {}
+    for g, (op, a, b, c, _out) in enumerate(gates):
+        for v in _row_operands(op, a, b, c):
+            last_use[v] = g
+    live = set(input_ids)
+    peak = len(live)
+    for g, (op, a, b, c, out) in enumerate(gates):
+        live.add(out)
+        peak = max(peak, len(live))
+        for v in _row_operands(op, a, b, c):
+            if last_use.get(v, -1) == g and v in live and v not in protected:
+                live.discard(v)
+    return peak
+
+
+REORDER_WINDOW = 256  # how far ahead of program order a freeing gate may hoist
+
+
+def reorder_pressure(ir: ScheduleIR, window: int = REORDER_WINDOW) -> ScheduleIR:
+    """Register-pressure-aware list scheduler (pass name ``reorder``).
+
+    The recorded netlist order is already live-range-friendly (builders emit
+    ripple structure depth-first), so global greedy schedulers lose to it;
+    instead this pass *follows* program order and only hoists a ready gate
+    from the next ``window`` rows when doing so strictly shrinks the live
+    set now (it frees more operand columns than the one column it defines).
+    The result is kept only if its allocator high-water mark
+    (:func:`_peak_live`, = ``lower``'s ``num_cols``) is strictly better than
+    the incoming order's — the pass can never increase peak columns.
+    """
+    gates = _gate_rows(ir)
+    n = len(gates)
+    operands = [set(_row_operands(op, a, b, c)) for op, a, b, c, _ in gates]
+    defs = {g[4]: i for i, g in enumerate(gates)}
+    protected = {v for cols in ir.outputs.values() for v in cols}
+    input_ids = [v for cols in ir.inputs.values() for v in cols]
+
+    uses: dict[int, int] = {}
+    for ops_ in operands:
+        for v in ops_:
+            uses[v] = uses.get(v, 0) + 1
+    consumers: dict[int, list[int]] = {}
+    pending = [0] * n
+    for i, ops_ in enumerate(operands):
+        for v in ops_:
+            if v in defs:
+                consumers.setdefault(defs[v], []).append(i)
+                pending[i] += 1
+    ready = [pending[i] == 0 for i in range(n)]
+    scheduled = [False] * n
+
+    order: list[int] = []
+    nxt = 0  # next unscheduled gate in program order
+    while len(order) < n:
+        while scheduled[nxt]:
+            nxt += 1
+        best, best_net = nxt, 0
+        for i in range(nxt + 1, min(nxt + window + 1, n)):
+            if scheduled[i] or not ready[i]:
+                continue
+            freed = sum(
+                1 for v in operands[i] if uses[v] == 1 and v not in protected)
+            if freed - 1 > best_net:  # frees more than the value it defines
+                best, best_net = i, freed - 1
+        i = best
+        scheduled[i] = True
+        order.append(i)
+        for v in operands[i]:
+            uses[v] -= 1
+        for j in consumers.get(i, []):
+            pending[j] -= 1
+            if pending[j] == 0:
+                ready[j] = True
+
+    reordered = [gates[i] for i in order]
+    if _peak_live(reordered, input_ids, protected) >= _peak_live(
+            gates, input_ids, protected):
+        reordered = gates  # never worse than the incoming order
+    return _finish(ir, reordered, {}, "reorder")
+
+
+# ---------------------------------------------------------------------------
 # Basis lowering: NOR → MAJ3/NOT (the dram basis)
 # ---------------------------------------------------------------------------
 
@@ -494,10 +635,14 @@ PASS_REGISTRY = {
     "fuse": fuse_copies,
     "dce": dead_gate_elim,
     "dram": lower_to_dram,
+    "levelize": levelize,
+    "reorder": reorder_pressure,
 }
 
-# fuse after cse exposes new common NORs, so cse runs again before dce.
-DEFAULT_PASSES: tuple[str, ...] = ("fold", "cse", "fuse", "cse", "dce")
+# fuse after cse exposes new common NORs, so cse runs again before dce;
+# reorder runs last so the pressure scheduler sees the final gate set.
+DEFAULT_PASSES: tuple[str, ...] = ("fold", "cse", "fuse", "cse", "dce",
+                                   "reorder")
 
 # Window ladder tried by compile_op until peak columns fit the unoptimized
 # budget.  With CSE disabled entirely (last rung) the remaining passes only
@@ -565,6 +710,12 @@ class CompiledSchedule:
         """Rows that are native logic gates under this schedule's basis
         (NOR for memristive; MAJ3 + NOT for dram)."""
         return get_basis(self.basis).gate_count(self.ops)
+
+    @property
+    def num_waves(self) -> int:
+        """Dependency-wave count of the gate DAG — the schedule's depth if
+        every independent gate fired concurrently (``parallel_cycles``)."""
+        return int(self.meta.get("num_waves", 0))
 
     @property
     def peak_live_cols(self) -> int:
@@ -685,6 +836,9 @@ def lower(ir: ScheduleIR, key: str = "", basis: str | LogicBasis = "memristive",
             if last_use.get(v, -1) == g and v in mapping and v not in protected:
                 free.append(mapping.pop(v))
 
+    # Always recomputed here (O(G)) rather than trusted from pass meta: a
+    # pass running after levelize may have changed the gate set.
+    num_waves = max(_dataflow_waves(_gate_rows(ir)), default=0)
     return CompiledSchedule(
         key=key,
         ops=new_ops,
@@ -695,13 +849,16 @@ def lower(ir: ScheduleIR, key: str = "", basis: str | LogicBasis = "memristive",
         recorded_gates=int(ir.meta.get("recorded_gates", ir.nor_gates)),
         basis=basis.name,
         pass_log=ir.pass_log,
-        meta=dict(ir.meta, copy_aaps=copy_aaps),
+        meta=dict(ir.meta, copy_aaps=copy_aaps, num_waves=num_waves),
     )
 
 
 # ---------------------------------------------------------------------------
 # Multi-op programs: the compile_program frontend artifact
 # ---------------------------------------------------------------------------
+
+
+CONST_OP = "__const__"  # ProgramOp.op marker for immediate (scalar) planes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -711,12 +868,19 @@ class ProgramOp:
     each op defines the next id.  ``width`` is how many planes of the
     builder's result the program keeps (LSB first): fused fixed-point
     multiplies keep ``n`` of the ``2n`` product planes, and DCE then deletes
-    the gates that only fed the dropped half."""
+    the gates that only fed the dropped half.
+
+    ``op == CONST_OP`` defines an immediate instead: ``imm`` holds the
+    value's bit pattern (LSB-first, ``width`` planes) and recording lowers
+    it to the VM's cached ``OP_INIT0``/``OP_INIT1`` constant planes — a
+    traced Python scalar costs at most two INIT rows and **no** HBM input
+    planes."""
 
     op: str
     args: tuple[int, ...]
     out: int
     width: int
+    imm: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -759,7 +923,8 @@ class Program:
         one compilation regardless of the function name they came from."""
         ins = ",".join(map(str, self.in_widths))
         body = ";".join(
-            f"{n.op}({','.join(map(str, n.args))})->v{n.out}:{n.width}"
+            f"const[{n.imm:#x}]->v{n.out}:{n.width}" if n.op == CONST_OP
+            else f"{n.op}({','.join(map(str, n.args))})->v{n.out}:{n.width}"
             for n in self.body
         )
         outs = ",".join(f"v{v}" for v in self.outputs)
@@ -801,6 +966,12 @@ def record_program(program: Program) -> ScheduleIR:
         env[i] = [vm.input_plane() for _ in range(w)]
         inputs[name] = env[i]
     for node in program.body:
+        if node.op == CONST_OP:
+            env[node.out] = [
+                vm.const1() if (node.imm >> k) & 1 else vm.const0()
+                for k in range(node.width)
+            ]
+            continue
         spec = aritpim._OP_TABLE[node.op]
         out = list(spec.builder(vm, *[env[a] for a in node.args]))
         assert len(out) >= node.width, (node.op, len(out), node.width)
@@ -914,6 +1085,7 @@ class CostReport:
     schedule_len: int  # optimized rows incl. INITs
     cycles: int  # per-basis command cycles for the whole schedule
     num_cols: int  # peak live columns (liveness high-water mark)
+    parallel_cycles: int = 0  # dependency waves: intra-array parallel depth
     cycles_per_gate: int = CYCLES_PER_GATE_MEMRISTIVE
     basis: str = "memristive"
     maj_gates: int = 0  # dram basis: MAJ3 rows (the TRA count)
@@ -958,6 +1130,7 @@ class Backend:
             schedule_len=compiled.num_gates,
             cycles=compiled.cycles(cycles_per_gate),
             num_cols=compiled.num_cols,
+            parallel_cycles=int(compiled.meta.get("num_waves", 0)),
             cycles_per_gate=(
                 cycles_per_gate if cycles_per_gate is not None
                 else CYCLES_PER_GATE_MEMRISTIVE
@@ -1024,9 +1197,10 @@ def register_backend(backend: Backend) -> Backend:
 
 
 def get_backend(name: str) -> Backend:
-    if name not in _BACKENDS and name == "pallas":
-        # The Pallas executor registers itself on import; kept lazy so core
-        # never hard-depends on jax.experimental.pallas.
+    if name not in _BACKENDS and name.startswith("pallas"):
+        # The Pallas executors (pallas / pallas-unrolled / pallas-loop)
+        # register themselves on import; kept lazy so core never
+        # hard-depends on jax.experimental.pallas.
         import repro.kernels.pim_bitserial  # noqa: F401
     return _BACKENDS[name]
 

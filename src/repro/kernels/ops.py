@@ -7,8 +7,10 @@ cache (single-op traces canonicalize to the same cache entries as
 ``ir.compile_op``) and executes on the ``pallas`` backend (interpret mode on
 CPU; compiled on a real TPU).  Adding a wrapper is a registration, not a new
 code path, and every wrapper takes ``basis="memristive"|"dram"`` to execute
-the NOR or the MAJ3/NOT lowering of the same netlist.  ``pim_matmul`` is
-the MatPIM-schedule blocked matmul.
+the NOR or the MAJ3/NOT lowering of the same netlist, plus
+``mode="auto"|"unrolled"|"loop"`` to pick the executor kernel (wave-scheduled
+straight-line vs fori_loop; auto selects by gate count — DESIGN.md §5).
+``pim_matmul`` is the MatPIM-schedule blocked matmul.
 """
 
 from __future__ import annotations
@@ -33,55 +35,62 @@ def _fn(arith: str, dtype_name: str, nbits: int) -> pim.CompiledPimFunction:
     return pim.compile(_ARITH_FNS[arith], dtype=dtype, backend="pallas")
 
 
-def pim_float_add(x, y, interpret: bool = True, basis: str = "memristive"):
-    return _fn("add", "f32", 32)(x, y, interpret=interpret, basis=basis)
+def pim_float_add(x, y, interpret: bool = True, basis: str = "memristive",
+                  mode: str | None = None):
+    return _fn("add", "f32", 32)(x, y, interpret=interpret, basis=basis, mode=mode)
 
 
-def pim_float_sub(x, y, interpret: bool = True, basis: str = "memristive"):
-    return _fn("sub", "f32", 32)(x, y, interpret=interpret, basis=basis)
+def pim_float_sub(x, y, interpret: bool = True, basis: str = "memristive",
+                  mode: str | None = None):
+    return _fn("sub", "f32", 32)(x, y, interpret=interpret, basis=basis, mode=mode)
 
 
-def pim_float_mul(x, y, interpret: bool = True, basis: str = "memristive"):
-    return _fn("mul", "f32", 32)(x, y, interpret=interpret, basis=basis)
+def pim_float_mul(x, y, interpret: bool = True, basis: str = "memristive",
+                  mode: str | None = None):
+    return _fn("mul", "f32", 32)(x, y, interpret=interpret, basis=basis, mode=mode)
 
 
-def pim_float_div(x, y, interpret: bool = True, basis: str = "memristive"):
-    return _fn("div", "f32", 32)(x, y, interpret=interpret, basis=basis)
+def pim_float_div(x, y, interpret: bool = True, basis: str = "memristive",
+                  mode: str | None = None):
+    return _fn("div", "f32", 32)(x, y, interpret=interpret, basis=basis, mode=mode)
 
 
-def pim_bf16_add(x, y, interpret: bool = True, basis: str = "memristive"):
-    return _fn("add", "bf16", 16)(x, y, interpret=interpret, basis=basis)
+def pim_bf16_add(x, y, interpret: bool = True, basis: str = "memristive",
+                  mode: str | None = None):
+    return _fn("add", "bf16", 16)(x, y, interpret=interpret, basis=basis, mode=mode)
 
 
-def pim_bf16_sub(x, y, interpret: bool = True, basis: str = "memristive"):
-    return _fn("sub", "bf16", 16)(x, y, interpret=interpret, basis=basis)
+def pim_bf16_sub(x, y, interpret: bool = True, basis: str = "memristive",
+                  mode: str | None = None):
+    return _fn("sub", "bf16", 16)(x, y, interpret=interpret, basis=basis, mode=mode)
 
 
-def pim_bf16_mul(x, y, interpret: bool = True, basis: str = "memristive"):
-    return _fn("mul", "bf16", 16)(x, y, interpret=interpret, basis=basis)
+def pim_bf16_mul(x, y, interpret: bool = True, basis: str = "memristive",
+                  mode: str | None = None):
+    return _fn("mul", "bf16", 16)(x, y, interpret=interpret, basis=basis, mode=mode)
 
 
 def pim_fixed_add(x, y, nbits: int = 32, interpret: bool = True,
-                  basis: str = "memristive"):
-    return _fn("add", "fixed", nbits)(x, y, interpret=interpret, basis=basis)
+                  basis: str = "memristive", mode: str | None = None):
+    return _fn("add", "fixed", nbits)(x, y, interpret=interpret, basis=basis, mode=mode)
 
 
 def pim_fixed_sub(x, y, nbits: int = 32, interpret: bool = True,
-                  basis: str = "memristive"):
-    return _fn("sub", "fixed", nbits)(x, y, interpret=interpret, basis=basis)
+                  basis: str = "memristive", mode: str | None = None):
+    return _fn("sub", "fixed", nbits)(x, y, interpret=interpret, basis=basis, mode=mode)
 
 
 def pim_fixed_mul(x, y, nbits: int = 32, interpret: bool = True,
-                  basis: str = "memristive"):
+                  basis: str = "memristive", mode: str | None = None):
     """Signed N×N multiply; returns the low N bits (wrapping, like int mul)."""
-    return _fn("mul", "fixed", nbits)(x, y, interpret=interpret, basis=basis)
+    return _fn("mul", "fixed", nbits)(x, y, interpret=interpret, basis=basis, mode=mode)
 
 
 def pim_fixed_div(x, y, nbits: int = 32, interpret: bool = True,
-                  basis: str = "memristive"):
+                  basis: str = "memristive", mode: str | None = None):
     """Signed division (C truncation semantics); x//0 is the netlist's
     documented all-ones convention."""
-    return _fn("div", "fixed", nbits)(x, y, interpret=interpret, basis=basis)
+    return _fn("div", "fixed", nbits)(x, y, interpret=interpret, basis=basis, mode=mode)
 
 
 def pim_matmul_op(a, b, *, bm=128, bk=128, bn=128, interpret: bool = True):

@@ -3,27 +3,51 @@
 TPU-native adaptation of the paper's crossbar column ops (DESIGN.md §2): a
 crossbar column over R rows becomes a lane-packed ``uint32`` bit-plane of
 ``R/32`` words; the serial gate schedule becomes a sequence of bitwise VPU
-ops over VMEM-resident planes.  The ``fori_loop`` dispatch executes both
-logic bases — memristive NOR rows and the DRAM basis' MAJ3/NOT rows — so one
-kernel serves every ``(program, basis, passes)`` compile, including fused
-multi-op programs from the ``repro.pim`` frontend: the static input/output
-slot maps carry however many named operands/results the program declares.
-HBM traffic is exactly the program's boundary planes (inputs read + outputs
-written; ``CostReport.hbm_planes``) — independent of schedule length, and
-intermediate values of a fused program never leave VMEM, exactly the
+ops over VMEM-resident planes.  Both logic bases execute here — memristive
+NOR rows and the DRAM basis' MAJ3/NOT rows — so one executor serves every
+``(program, basis, passes)`` compile, including fused multi-op programs from
+the ``repro.pim`` frontend.  HBM traffic is exactly the program's boundary
+planes (``CostReport.hbm_planes``) — independent of schedule length, the
 in-memory property the paper models.
 
-The kernel is the ``pallas`` executor backend of the compiler pipeline
-(DESIGN.md §3–4): it consumes an optimized ``ir.CompiledSchedule`` whose
-static input/output slot maps are baked into the kernel closure, and
-registers itself in ``ir``'s backend registry on import.
+Two executor modes share the registry (DESIGN.md §5):
+
+* ``loop`` — the original ``fori_loop`` kernel: one gate per iteration,
+  dynamic single-row ``pl.load``/``pl.store`` plus a five-deep ``jnp.where``
+  opcode select, and the five gate arrays shipped to the device.  O(1)
+  compile in schedule length, but each gate pays dynamic-indexing and
+  select overhead — orders of magnitude slower than the bitwise VPU ops it
+  dispatches.
+* ``unrolled`` — a **wave-scheduled straight-line** kernel generated from
+  the fact that ``(op, a, b, c, o)`` are static per ``CompiledSchedule``:
+  the body is Python-unrolled bitwise ops on fixed ``state[col]`` indices —
+  no dynamic indexing, no opcode-select chain, no scalar gate arrays on the
+  device.  Gates are grouped into hazard-free *wave chunks* (no gate reads
+  a column written earlier in its chunk), emitted read-then-write so every
+  chunk is a batch of mutually independent VPU ops; long schedules are
+  split into segments of ``UNROLL_SEGMENT_GATES`` at chunk boundaries
+  (XLA compile time is superlinear in straight-line length) with the
+  column state threaded between segment kernels.  In ``interpret`` mode the
+  identical generated body runs as a plain jit — skipping the
+  ``pallas_call`` emulation layer, which only adds tracing overhead on CPU;
+  on hardware each segment is a ``pl.pallas_call`` with the grid over
+  word-blocks and the state block aliased in/out.
+
+The ``pallas`` backend picks the mode automatically by gate count
+(``UNROLL_AUTO_MAX_GATES``): short schedules unroll, very long ones fall
+back to the loop kernel.  ``pallas-unrolled`` / ``pallas-loop`` force one
+mode (the CI perf gate in ``benchmarks/smoke.py`` races them on the f32
+fused MAC).  Per-schedule artifacts — the gate arrays and their device
+upload for the loop kernel, the wave-chunked segments for the unrolled
+kernel — are cached by schedule key, so repeat dispatches stop rebuilding
+and re-transferring them.
 
 Tiling: the grid runs over blocks of the packed-words axis; each program
-holds the *entire* (column-allocated) crossbar state for its word-block in a
-VMEM scratch of shape ``[num_cols, BLOCK_WORDS]``.  The allocated column
-count (≤133 for float32 ops, see ``ir.lower``) and ``BLOCK_WORDS=256`` give
-a ~136 KiB working set — comfortably inside VMEM and an exact analogue of
-one crossbar's 1024-column budget.
+holds the *entire* (column-allocated) crossbar state for its word-block in
+``[num_cols, BLOCK_WORDS]`` — with ``num_cols ≤ 133`` for float ops (see
+``ir.lower`` and the ``reorder`` pass) and ``BLOCK_WORDS = 256`` that is a
+~136 KiB working set, comfortably inside VMEM and an exact analogue of one
+crossbar's 1024-column budget.
 """
 
 from __future__ import annotations
@@ -43,10 +67,27 @@ from repro.core.machine import (
     OP_NOR,
     OP_NOT,
     Schedule,
+    operand_slots,
 )
 
 BLOCK_WORDS = 256
 UMAX32 = 0xFFFFFFFF  # python int: folded into the kernel, not a captured array
+
+# Mode-auto threshold: schedules at or below this many gates unroll; longer
+# ones keep the fori_loop kernel (straight-line XLA compile time grows
+# superlinearly, so unrolling a 20k-gate divider buys compile pain for a
+# win the loop kernel amortizes anyway).  Force a mode with the
+# ``pallas-unrolled`` / ``pallas-loop`` backends.
+UNROLL_AUTO_MAX_GATES = 1024
+# Straight-line gates per generated segment kernel; boundaries snap to wave
+# chunk edges.  ~4 s of XLA-CPU compile per segment, amortized by the
+# per-key segment cache.
+UNROLL_SEGMENT_GATES = 1024
+
+
+# ---------------------------------------------------------------------------
+# fori_loop kernel (the `loop` mode)
+# ---------------------------------------------------------------------------
 
 
 def _kernel(op_ref, a_ref, b_ref, c_ref, o_ref, in_ref, out_ref, state, *,
@@ -86,8 +127,10 @@ def _kernel(op_ref, a_ref, b_ref, c_ref, o_ref, in_ref, out_ref, state, *,
         out_ref[i, :] = state[col, :]
 
 
-@functools.partial(jax.jit, static_argnames=("schedule_key", "interpret"))
-def _run(op, a, b, c, o, planes, *, schedule_key, interpret):
+@functools.partial(jax.jit, static_argnames=("schedule_key", "gen", "interpret"))
+def _run(op, a, b, c, o, planes, *, schedule_key, gen, interpret):
+    # `gen` bumps when a different schedule is registered under this key, so
+    # traces that baked the old static slot maps are never reused.
     compiled = _SCHEDULES[schedule_key]
     input_slots = compiled.input_slots
     output_slots = compiled.output_slots
@@ -112,12 +155,166 @@ def _run(op, a, b, c, o, planes, *, schedule_key, interpret):
     )(op, a, b, c, o, planes)
 
 
+# ---------------------------------------------------------------------------
+# Wave-scheduled straight-line kernel (the `unrolled` mode)
+# ---------------------------------------------------------------------------
+
+
+def _wave_chunks(rows):
+    """Greedy hazard-free chunking of allocated schedule rows.
+
+    A gate joins the current chunk while it reads no column written earlier
+    in the chunk (and does not re-write one).  All reads of a chunk then see
+    pre-chunk state, so the generated read-then-write code — every result
+    computed before any column is stored — is exactly program-order
+    semantics, and each chunk is a batch of mutually independent VPU ops
+    (the executable counterpart of ``ir.levelize``'s dependency waves;
+    wave-major schedules chunk at full wave width).
+    """
+    chunks: list[list[tuple[int, int, int, int, int]]] = []
+    cur: list[tuple[int, int, int, int, int]] = []
+    written: set[int] = set()
+    for row in rows:
+        op, a, b, c, o = row
+        reads = {(a, b, c)[s] for s in operand_slots(op)}
+        if cur and (reads & written or o in written):
+            chunks.append(cur)
+            cur, written = [], set()
+        cur.append(row)
+        written.add(o)
+    if cur:
+        chunks.append(cur)
+    return chunks
+
+
+def _segments(compiled: ir.CompiledSchedule):
+    """Wave chunks grouped into straight-line segments of at most
+    ``UNROLL_SEGMENT_GATES`` gates (chunk boundaries are never split)."""
+    rows = [tuple(int(x) for x in row) for row in compiled.ops]
+    segments: list[list[list[tuple[int, int, int, int, int]]]] = [[]]
+    count = 0
+    for chunk in _wave_chunks(rows):
+        if count and count + len(chunk) > UNROLL_SEGMENT_GATES:
+            segments.append([])
+            count = 0
+        segments[-1].append(chunk)
+        count += len(chunk)
+    return segments
+
+
+def _emit_chunks(cols, chunks):
+    """Generate the straight-line body: per chunk, compute every gate from
+    pre-chunk column values, then commit the writes.  ``cols`` is a Python
+    list of per-column arrays/ref-reads, so the emitted jaxpr is pure SSA
+    dataflow — no dynamic indexing and no opcode select survive tracing."""
+    zero = None
+    for chunk in chunks:
+        results = []
+        for op, a, b, c, o in chunk:
+            if op == OP_NOR:
+                r = ~(cols[a] | cols[b])
+            elif op == OP_MAJ3:
+                r = (cols[a] & cols[b]) | (cols[a] & cols[c]) | (cols[b] & cols[c])
+            elif op == OP_NOT:
+                r = ~cols[a]
+            elif op == OP_INIT0:
+                if zero is None:
+                    zero = jnp.zeros_like(cols[0])
+                r = zero
+            elif op == OP_INIT1:
+                r = jnp.full_like(cols[0], UMAX32)
+            else:  # OP_COPY
+                r = cols[a]
+            results.append((o, r))
+        for o, r in results:
+            cols[o] = r
+
+
+def _unrolled_segment_kernel(state_ref, out_ref, *, chunks, num_cols):
+    cols = [state_ref[i, :] for i in range(num_cols)]
+    _emit_chunks(cols, chunks)
+    for i in range(num_cols):
+        out_ref[i, :] = cols[i]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("schedule_key", "gen", "seg", "interpret"),
+                   donate_argnums=0)
+def _run_unrolled_segment(state, *, schedule_key, gen, seg, interpret):
+    # `gen` bumps when a different schedule is registered under this key, so
+    # traces that baked the old gate list are never reused.
+    chunks = _segment_cache(schedule_key)[seg]
+    num_cols, W = state.shape
+    if interpret:
+        # Same generated body, plain jit: pallas_call's interpret emulation
+        # only adds per-op tracing cost on CPU.
+        cols = [state[i] for i in range(num_cols)]
+        _emit_chunks(cols, chunks)
+        return jnp.stack(cols)
+    return pl.pallas_call(
+        functools.partial(_unrolled_segment_kernel, chunks=chunks,
+                          num_cols=num_cols),
+        grid=(W // BLOCK_WORDS,),
+        in_specs=[pl.BlockSpec((num_cols, BLOCK_WORDS), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((num_cols, BLOCK_WORDS), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((num_cols, W), jnp.uint32),
+        input_output_aliases={0: 0},
+        interpret=False,
+    )(state)
+
+
+def _run_unrolled(compiled: ir.CompiledSchedule, key: str, planes, interpret):
+    gen = _GENERATIONS.get(key, 0)
+    state = jnp.zeros((compiled.num_cols, planes.shape[1]), jnp.uint32)
+    state = state.at[jnp.asarray(compiled.input_slots)].set(
+        jnp.asarray(planes, jnp.uint32))
+    for seg in range(len(_segment_cache(key))):
+        state = _run_unrolled_segment(
+            state, schedule_key=key, gen=gen, seg=seg, interpret=interpret)
+    return state[jnp.asarray(compiled.output_slots)]
+
+
+# ---------------------------------------------------------------------------
+# Per-schedule caches and dispatch
+# ---------------------------------------------------------------------------
+
 # Registry of compiled schedules (keyed so jit can treat them as static).
 _SCHEDULES: dict[str, ir.CompiledSchedule] = {}
+# Device-resident gate arrays for the loop kernel, built/uploaded once per
+# key instead of per call.
+_GATE_ARRAYS: dict[str, tuple] = {}
+# Wave-chunked straight-line segments for the unrolled kernel.
+_SEGMENTS: dict[str, list] = {}
+# Bumped when a key is rebound to different schedule content; part of the
+# kernels' static jit keys, so stale traces are never replayed.
+_GENERATIONS: dict[str, int] = {}
+
+
+def _invalidate(key: str) -> None:
+    _GATE_ARRAYS.pop(key, None)
+    _SEGMENTS.pop(key, None)
+    _GENERATIONS[key] = _GENERATIONS.get(key, 0) + 1
+
+
+def _gate_arrays(key: str) -> tuple:
+    arrays = _GATE_ARRAYS.get(key)
+    if arrays is None:
+        arrays = _GATE_ARRAYS[key] = tuple(
+            jax.device_put(a) for a in _SCHEDULES[key].as_arrays())
+    return arrays
+
+
+def _segment_cache(key: str) -> list:
+    segments = _SEGMENTS.get(key)
+    if segments is None:
+        segments = _SEGMENTS[key] = _segments(_SCHEDULES[key])
+    return segments
 
 
 def register_compiled(compiled: ir.CompiledSchedule, key: str | None = None) -> str:
     key = key or compiled.key
+    if _SCHEDULES.get(key) is not compiled:
+        _invalidate(key)
     _SCHEDULES[key] = compiled
     return key
 
@@ -126,41 +323,86 @@ def register_schedule(key: str, schedule: Schedule | ir.CompiledSchedule) -> Non
     """Register a schedule under ``key``.  Accepts a ``CompiledSchedule`` or a
     legacy (column-allocated) ``machine.Schedule``, which is wrapped as-is."""
     if isinstance(schedule, ir.CompiledSchedule):
-        _SCHEDULES[key] = schedule
+        register_compiled(schedule, key)
         return
+    _invalidate(key)
     _SCHEDULES[key] = ir.CompiledSchedule.from_legacy(schedule, key=key)
 
 
-def run_schedule(key: str, planes: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+def resolve_mode(compiled: ir.CompiledSchedule, mode: str = "auto") -> str:
+    """``auto`` picks by gate count; ``unrolled``/``loop`` force a kernel."""
+    if mode == "auto":
+        return ("unrolled" if compiled.num_gates <= UNROLL_AUTO_MAX_GATES
+                else "loop")
+    if mode not in ("unrolled", "loop"):
+        raise ValueError(f"unknown executor mode {mode!r} "
+                         "(expected 'auto', 'unrolled' or 'loop')")
+    return mode
+
+
+def run_schedule(key: str, planes: jnp.ndarray, interpret: bool = True,
+                 mode: str = "auto") -> jnp.ndarray:
     """Execute registered schedule ``key`` over stacked input planes.
 
     planes: ``[n_inputs, W]`` uint32 — inputs concatenated in sorted-name
     order (matching ``CompiledSchedule.input_slots``).  Returns
     ``[n_outputs, W]``.  W is padded to a BLOCK_WORDS multiple internally.
+    ``mode`` selects the kernel: ``auto`` (by gate count), ``unrolled``
+    (wave-scheduled straight line) or ``loop`` (fori_loop dispatch).
     """
     compiled = _SCHEDULES[key]
-    assert planes.shape[0] == len(compiled.input_slots), (
-        planes.shape, len(compiled.input_slots))
+    if planes.shape[0] != len(compiled.input_slots):
+        expected = {name: len(cols)
+                    for name, cols in sorted(compiled.input_cols.items())}
+        raise ValueError(
+            f"schedule {key!r} expects {len(compiled.input_slots)} stacked "
+            f"input planes ({expected}, in sorted-name order), got "
+            f"{planes.shape[0]}")
     W = planes.shape[1]
     pad = (-W) % BLOCK_WORDS
     if pad:
         planes = jnp.pad(planes, ((0, 0), (0, pad)))
-    op, a, b, c, o = compiled.as_arrays()
-    out = _run(op, a, b, c, o, planes, schedule_key=key, interpret=interpret)
+    if resolve_mode(compiled, mode) == "unrolled":
+        out = _run_unrolled(compiled, key, planes, interpret)
+    else:
+        op, a, b, c, o = _gate_arrays(key)
+        out = _run(op, a, b, c, o, planes, schedule_key=key,
+                   gen=_GENERATIONS.get(key, 0), interpret=interpret)
     return out[:, :W]
 
 
 class PallasBackend(ir.Backend):
-    """TPU executor: one VMEM-resident crossbar per word-block (interpret
-    mode executes the same kernel body on CPU)."""
+    """TPU executor: one VMEM-resident crossbar per word-block, kernel mode
+    chosen by gate count (interpret mode executes the same generated gate
+    sequence on CPU).  ``opts['mode']`` overrides the selection per call."""
 
     name = "pallas"
+    mode = "auto"
 
-    def run(self, compiled, planes=None, interpret: bool = True, **opts):
-        assert planes is not None, "pallas backend needs input planes"
+    def run(self, compiled, planes=None, interpret: bool = True,
+            mode: str | None = None, **opts):
+        if planes is None:
+            raise ValueError(f"{self.name} backend needs input planes")
         key = register_compiled(compiled)
-        out = run_schedule(key, planes, interpret=interpret)
+        out = run_schedule(key, planes, interpret=interpret,
+                           mode=mode or self.mode)
         return ir.ExecutionResult(out, self.cost(compiled))
 
 
+class PallasUnrolledBackend(PallasBackend):
+    """Forces the wave-scheduled straight-line kernel regardless of size."""
+
+    name = "pallas-unrolled"
+    mode = "unrolled"
+
+
+class PallasLoopBackend(PallasBackend):
+    """Forces the fori_loop kernel (the unrolled mode's perf baseline)."""
+
+    name = "pallas-loop"
+    mode = "loop"
+
+
 ir.register_backend(PallasBackend())
+ir.register_backend(PallasUnrolledBackend())
+ir.register_backend(PallasLoopBackend())

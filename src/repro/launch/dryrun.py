@@ -36,7 +36,7 @@ for _a in ARCHS:
     if not _c.supports_long_context:
         SKIPS[(_a, "long_500k")] = (
             "full-attention arch: 500k decode requires sub-quadratic "
-            "attention (DESIGN.md §5)"
+            "attention (DESIGN.md §6)"
         )
 
 

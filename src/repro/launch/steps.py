@@ -15,7 +15,7 @@ from repro.optim.adamw import apply_updates
 
 
 def choose_optimizer(cfg: ModelConfig, name: str = "auto"):
-    """Memory plan (DESIGN.md §6): grok-scale models train with Adafactor on
+    """Memory plan (DESIGN.md §7): grok-scale models train with Adafactor on
     a single pod; everything else uses AdamW."""
     if name == "auto":
         name = "adafactor" if cfg.param_count() > 1e11 else "adamw"

@@ -2,7 +2,7 @@
 
 Pure-JAX functional implementations with analytic FLOP/byte accounting used
 by benchmarks/fig6_cnn_infer.py and fig7_cnn_train.py (the PyTorch+Nsight
-methodology of the paper maps to jit + cost_analysis here, DESIGN.md §8).
+methodology of the paper maps to jit + cost_analysis here, DESIGN.md §9).
 """
 
 from __future__ import annotations

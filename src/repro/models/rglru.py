@@ -3,7 +3,7 @@
 Gated linear recurrence h_t = a_t ⊙ h_{t-1} + √(1-a_t²) ⊙ (i_t ⊙ x_t) with
 a_t = exp(-c·softplus(Λ)·r_t); prefill/train uses ``associative_scan``
 (log-depth), decode carries a [B, w] state — O(1) per token, which is what
-makes the 500k-context cell feasible (DESIGN.md §5).
+makes the 500k-context cell feasible (DESIGN.md §6).
 """
 
 from __future__ import annotations

@@ -1,5 +1,5 @@
 """Adafactor (factored second moments) — the memory plan for grok-scale
-training on a single pod (DESIGN.md §6): ~4 bytes/param of optimizer state
+training on a single pod (DESIGN.md §7): ~4 bytes/param of optimizer state
 versus AdamW's 8."""
 
 from __future__ import annotations

@@ -14,9 +14,12 @@ arguments whose arithmetic operators append ops to a :class:`Trace`; the
 result is an ``ir.Program`` whose per-op ``aritpim`` netlists are recorded
 into **one** ScheduleIR — output values of one op wired directly into the
 next, so intermediate planes never round-trip through HBM, and the compiler
-passes (fold/cse/fuse/dce) fire across op boundaries.  Netlists are picked
-by the tracer's :class:`~repro.core.bitplanes.PimType` via the
-``aritpim.OpSpec`` dtype metadata.
+passes (fold/cse/fuse/dce/reorder) fire across op boundaries.  Netlists are
+picked by the tracer's :class:`~repro.core.bitplanes.PimType` via the
+``aritpim.OpSpec`` dtype metadata.  Python scalars mixed into the trace
+(``a * b + 2.5``) lower to immediate INIT0/INIT1 constant planes
+(``ir.CONST_OP``) — they cost no HBM input traffic and constant folding
+sees straight through them.
 
 A single-op trace canonicalizes to ``ir.Program.single``, so e.g.
 ``pim.compile(lambda a, b: a + b, dtype=pim.f32)`` shares its compile-cache
@@ -37,7 +40,39 @@ from repro.core.bitplanes import PimType
 
 
 class TraceError(TypeError):
-    """Raised for untraceable operations (mixed dtypes, constants, ...)."""
+    """Raised for untraceable operations (mixed dtypes, non-scalar
+    constants, ...)."""
+
+
+def _encode_scalar(value, dtype: PimType) -> int:
+    """A Python scalar's LSB-first bit pattern in ``dtype``'s plane layout.
+
+    Reuses the exact ``PimType`` pack path (cast + ``to_planes`` on a
+    one-element array), so constants round/wrap exactly like runtime data:
+    floats go through IEEE/bf16 rounding, fixed-point wraps two's-complement
+    to ``nbits``.  Non-integral constants are rejected for fixed types."""
+    if dtype.kind == "fixed":
+        if isinstance(value, float) and not value.is_integer():
+            raise TraceError(
+                f"constant {value!r} is not representable in {dtype.name}: "
+                "fixed-point programs take integral constants only")
+        # Wrap to the signed two's-complement representative so the int32
+        # carrier accepts it at every width (a raw 32-bit mask of a negative
+        # constant would overflow jnp.int32).
+        v = int(value) & ((1 << dtype.nbits) - 1)
+        if v >= 1 << (dtype.nbits - 1):
+            v -= 1 << dtype.nbits
+        value = jnp.asarray(v, jnp.int32)
+    else:
+        # Go through Python float first: an int like 2**35 is exactly what
+        # float rounding is for, but would overflow the default int32 path.
+        try:
+            value = float(value)
+        except OverflowError:
+            raise TraceError(
+                f"constant {value!r} overflows {dtype.name}") from None
+    planes = dtype.to_planes(dtype.cast(jnp.asarray(value).reshape(1)))
+    return sum((int(p[0]) & 1) << k for k, p in enumerate(planes))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,10 +84,14 @@ class Tracer:
     dtype: PimType
 
     def _bin(self, other, arith: str, reverse: bool = False) -> "Tracer":
+        if isinstance(other, (int, float, bool)):
+            # Scalar constants lower to INIT0/INIT1 immediate planes — they
+            # never become HBM inputs (ir.CONST_OP).
+            other = self.trace.constant(other, self.dtype)
         if not isinstance(other, Tracer):
             raise TraceError(
                 f"cannot apply {arith!r} to a tracer and {type(other).__name__}: "
-                "constants are not traceable — pass them as program inputs"
+                "only Python scalars and tracers of the same dtype combine"
             )
         if other.trace is not self.trace:
             raise TraceError("tracers from different traces cannot be combined")
@@ -96,6 +135,7 @@ class Trace:
         self.in_types: list[PimType] = []
         self.body: list[ir.ProgramOp] = []
         self._next_id = 0
+        self._consts: dict[tuple[int, str], Tracer] = {}
 
     def _fresh(self) -> int:
         v = self._next_id
@@ -106,6 +146,23 @@ class Trace:
         assert not self.body, "inputs must be declared before any op"
         self.in_types.append(dtype)
         return Tracer(self, self._fresh(), dtype)
+
+    def constant(self, value, dtype: PimType) -> Tracer:
+        """A scalar immediate: one CONST_OP node holding the bit pattern
+        (deduplicated per (bits, dtype) so ``a*2 + b*2`` traces one node —
+        the dtype is part of the key because two types can share a bit
+        pattern, e.g. int16 16256 and bf16 1.0)."""
+        bits = _encode_scalar(value, dtype)
+        key = (bits, dtype.name)
+        hit = self._consts.get(key)
+        if hit is not None:
+            return hit
+        out = self._fresh()
+        self.body.append(
+            ir.ProgramOp(ir.CONST_OP, (), out, dtype.width, imm=bits))
+        tracer = Tracer(self, out, dtype)
+        self._consts[key] = tracer
+        return tracer
 
     def emit(self, arith: str, a: Tracer, b: Tracer) -> Tracer:
         op = aritpim.op_for(arith, a.dtype.kind)
@@ -163,7 +220,8 @@ class CompiledPimFunction:
 
     def __call__(self, *arrays, basis: str = "memristive",
                  passes: tuple[str, ...] = ir.DEFAULT_PASSES,
-                 backend: str | None = None, interpret: bool = True):
+                 backend: str | None = None, interpret: bool = True,
+                 mode: str | None = None):
         if len(arrays) != len(self.in_types):
             raise TypeError(
                 f"expected {len(self.in_types)} arrays, got {len(arrays)}")
@@ -173,8 +231,14 @@ class CompiledPimFunction:
             [p for t, x in zip(self.in_types, arrays) for p in t.to_planes(x)]
         )
         compiled = self.compiled(basis, passes)
-        out = ir.get_backend(backend or self.backend).run(
-            compiled, planes, interpret=interpret).planes
+        name = backend or self.backend
+        if mode is not None and not name.startswith("pallas"):
+            raise ValueError(
+                f"executor mode {mode!r} only applies to the pallas "
+                f"backends, not {name!r}")
+        opts = {} if mode is None else {"mode": mode}
+        out = ir.get_backend(name).run(
+            compiled, planes, interpret=interpret, **opts).planes
         results, i = [], 0
         for t in self.out_types:
             results.append(t.from_planes([out[i + j] for j in range(t.width)], n))

@@ -22,7 +22,8 @@ from repro.core.machine import (
 
 np.seterr(all="ignore")
 
-PASS_CONFIGS = [(), ("fold",), ("cse",), ("fuse",), ("dce",), ir.DEFAULT_PASSES]
+PASS_CONFIGS = [(), ("fold",), ("cse",), ("fuse",), ("dce",), ("reorder",),
+                ("levelize",), ir.DEFAULT_PASSES]
 
 
 def _f32_vec(n, seed):

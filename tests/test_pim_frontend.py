@@ -188,8 +188,10 @@ def test_multi_output_program():
 
 
 def test_trace_errors():
-    with pytest.raises(pim.TraceError):
-        pim.compile(lambda a, b: a + 1.0, dtype=pim.f32)
+    with pytest.raises(pim.TraceError):  # non-scalar constants stay errors
+        pim.compile(lambda a, b: a + "one", dtype=pim.f32)
+    with pytest.raises(pim.TraceError):  # non-integral constant in fixed
+        pim.compile(lambda a, b: a + 1.5, dtype=pim.int8)
     with pytest.raises(pim.TraceError):
         pim.compile(lambda a, b: a + b, dtype=(pim.f32, pim.bf16))
     with pytest.raises(KeyError):  # no bf16 division netlist registered
@@ -198,6 +200,79 @@ def test_trace_errors():
         pim.compile(lambda a: 7, dtype=pim.f32)
     with pytest.raises(pim.TraceError):  # *args is not traceable
         pim.compile(lambda *args: args[0] + args[1], dtype=pim.f32)
+    with pytest.raises(pim.TraceError, match="overflows"):  # 10**400 > f64
+        pim.compile(lambda a: a + 10**400, dtype=pim.f32)
+    with pytest.raises(ValueError, match="only applies to the pallas"):
+        pim.compile(lambda a, b: a + b, dtype=pim.int8)(
+            np.arange(3, dtype=np.int32), np.arange(3, dtype=np.int32),
+            backend="interpreter", mode="unrolled")
+
+
+# --------------------------------------------------- scalar constants
+
+
+def test_scalar_constants_f32():
+    """Python scalars trace to immediate INIT planes: bit-exact vs numpy
+    (same rounding as runtime data) with no extra HBM input planes."""
+    fn = pim.compile(lambda a, b: a * b + 2.5, dtype=pim.f32,
+                     backend="interpreter")
+    rng = np.random.default_rng(21)
+    x = rng.standard_normal(N_VEC).astype(np.float32)
+    y = rng.standard_normal(N_VEC).astype(np.float32)
+    _check(pim.f32, fn(x, y), (x * y + np.float32(2.5)).astype(np.float32))
+    rep = fn.cost()
+    assert rep.hbm_planes_in == 64  # the constant is not an input plane
+
+
+def test_scalar_constants_reverse_and_fixed():
+    two_minus = pim.compile(lambda a: 2 - a, dtype=pim.int8,
+                            backend="interpreter")
+    x = np.array([5, -3, 127, -128, 0], np.int32)
+    exp = ((2 - x + 128) % 256 - 128).astype(np.int32)
+    assert np.array_equal(np.asarray(two_minus(x)), exp)
+
+    scale = pim.compile(lambda a: a * 3 + 1, dtype=pim.int8,
+                        backend="interpreter")
+    exp2 = ((x * 3 + 1 + 128) % 256 - 128).astype(np.int32)
+    assert np.array_equal(np.asarray(scale(x)), exp2)
+
+    # negative constants wrap to the signed representative at every width,
+    # including the full-int32 case whose raw mask overflows the carrier
+    neg32 = pim.compile(lambda a: a + (-5), dtype=pim.int32,
+                        backend="interpreter")
+    xw = np.array([100, -100, 2**31 - 1], np.int32)
+    expw = (((xw.astype(np.int64) - 5) + 2**31) % 2**32 - 2**31).astype(np.int32)
+    assert np.array_equal(np.asarray(neg32(xw)), expw)
+
+
+def test_scalar_constants_fold_and_dedup():
+    """Repeated constants trace to one node; constant folding then chews
+    through the INIT planes, so `a * 1.0` costs no more gates than `a + 0.0`
+    costs planes — and the program key distinguishes different immediates."""
+    f1 = pim.compile(lambda a, b: a * 2.0 + b * 2.0, dtype=pim.f32)
+    consts = [n for n in f1.program.body if n.op == ir.CONST_OP]
+    assert len(consts) == 1  # deduplicated per bit pattern
+    k2 = pim.compile(lambda a, b: a * 2.0 + b * 4.0, dtype=pim.f32)
+    assert f1.program.key != k2.program.key
+
+    # big integer constants in float traces round like floats (2**35 would
+    # overflow the fixed-point carrier path)
+    big = pim.compile(lambda a: a + 2**35, dtype=pim.f32,
+                      backend="interpreter")
+    xb = np.array([1.0, -(2.0**35)], np.float32)
+    _check(pim.f32, big(xb), (xb + np.float32(2**35)).astype(np.float32))
+
+    # constant dedup is per dtype: int16 16256 and bf16 1.0 share a bit
+    # pattern but must not share a tracer in a multi-dtype trace
+    mixed = pim.compile(lambda a, b: (a + 16256, b + 1.0),
+                        dtype=(pim.int16, pim.bf16), backend="interpreter")
+    xi = np.array([1, -2], np.int32)
+    xf = np.array([0.5, -3.0], np.float32)
+    s, f = mixed(xi, jnp.asarray(xf, jnp.bfloat16))
+    exp_i = (((xi + 16256) + 2**15) % 2**16 - 2**15).astype(np.int32)
+    assert np.array_equal(np.asarray(s), exp_i)
+    import ml_dtypes
+    _check(pim.bf16, f, (xf.astype(np.float64) + 1.0).astype(ml_dtypes.bfloat16))
 
 
 def test_simulate_float_mac_oracle_and_cost():
